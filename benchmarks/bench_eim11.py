@@ -1,0 +1,62 @@
+"""EIM11 comparison (paper §8 discussion: why it's impractical).
+
+The paper could not even run EIM11 competitively ("machine running time
+more than a hundred-fold larger"); we quantify the asymmetry: broadcast
+volume and machine-side distance evaluations vs SOCCER.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json
+from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
+from repro.core.eim11 import run_eim11
+from repro.core.metrics import centralized_cost
+from repro.core.soccer import run_soccer
+from repro.data.synthetic import gaussian_mixture, shard_points
+
+M = 8
+
+
+def run(n: int = 24_000, k: int = 10):
+    x, _, _ = gaussian_mixture(
+        GaussianMixtureSpec(n=n, dim=15, k=k, sigma=0.001))
+    parts = jnp.asarray(shard_points(x, M))
+    xg = jnp.asarray(x)
+
+    t0 = time.perf_counter()
+    soc = run_soccer(parts, SoccerParams(k=k, epsilon=0.1, seed=0))
+    t_soc = time.perf_counter() - t0
+    cost_s = float(centralized_cost(xg, jnp.asarray(soc.centers)))
+    bcast_s = soc.rounds * soc.const.k_plus
+
+    t0 = time.perf_counter()
+    eim = run_eim11(parts, k=k, epsilon=0.1, max_rounds=8, seed=0)
+    t_eim = time.perf_counter() - t0
+    cost_e = float(centralized_cost(xg, jnp.asarray(eim.centers)))
+
+    # machine distance work: points x broadcast centers per round
+    dist_work_soc = soc.rounds * n * soc.const.k_plus
+    dist_work_eim = sum(int(h) for h in eim.n_hist[:-1]) * \
+        eim.broadcast_points // max(eim.rounds, 1)
+
+    payload = {
+        "soccer": {"cost": cost_s, "rounds": soc.rounds,
+                   "broadcast_points": int(bcast_s), "time_s": t_soc,
+                   "machine_dist_evals": int(dist_work_soc)},
+        "eim11": {"cost": cost_e, "rounds": eim.rounds,
+                  "broadcast_points": int(eim.broadcast_points),
+                  "time_s": t_eim,
+                  "machine_dist_evals": int(dist_work_eim)},
+    }
+    save_json("eim11", payload)
+    emit("eim11/broadcast_ratio", t_eim * 1e6,
+         eim_over_soccer_broadcast=f"{eim.broadcast_points/max(bcast_s,1):.0f}x",
+         eim_cost=f"{cost_e:.3g}", soccer_cost=f"{cost_s:.3g}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks.
+
+Wall time measures the XLA oracle path on this CPU container (the Pallas
+kernels execute only under interpret=True here, which is a correctness
+vehicle, not a performance one). For the TPU target we report the
+kernel's analytic roofline from its block structure: flops, HBM bytes,
+arithmetic intensity, and the projected v5e-bound time.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed
+from repro.kernels import ops
+from repro.roofline import hw
+
+SHAPES = [(200_000, 128, 16), (200_000, 256, 64), (50_000, 1024, 128)]
+
+
+def analytic(n, k, d):
+    flops = 2.0 * n * k * d
+    bytes_hbm = 4.0 * (n * d + k * d + 2 * n)      # stream x once, tiny out
+    t_c = flops / hw.PEAK_FLOPS_BF16
+    t_m = bytes_hbm / hw.HBM_BW
+    return flops, bytes_hbm, max(t_c, t_m), ("compute" if t_c > t_m
+                                             else "memory")
+
+
+def run():
+    rows = []
+    for n, k, d in SHAPES:
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+        t, _ = timed(lambda: ops.min_dist(x, c))
+        flops, byts, t_tpu, bound = analytic(n, k, d)
+        rows.append({"kernel": "min_dist", "n": n, "k": k, "d": d,
+                     "cpu_wall_s": t, "flops": flops, "hbm_bytes": byts,
+                     "tpu_bound": bound, "tpu_roofline_s": t_tpu,
+                     "intensity_flops_per_byte": flops / byts})
+        emit(f"kernel/min_dist/{n}x{k}x{d}", t * 1e6,
+             gflops_cpu=f"{flops/t/1e9:.1f}",
+             tpu_bound=bound, tpu_roofline_us=f"{t_tpu*1e6:.1f}")
+
+        w = jnp.ones((n,), jnp.float32)
+        a = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+        t, _ = timed(lambda: ops.lloyd_reduce(x, w, a, k))
+        rows.append({"kernel": "lloyd_reduce", "n": n, "k": k, "d": d,
+                     "cpu_wall_s": t})
+        emit(f"kernel/lloyd_reduce/{n}x{k}x{d}", t * 1e6)
+    save_json("kernels", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

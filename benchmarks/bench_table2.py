@@ -1,0 +1,75 @@
+"""Paper Table 2: SOCCER (1 round) vs k-means|| (1, 2, 5 rounds).
+
+Per dataset x k: cost, wall time, machine-phase time proxy, rounds,
+|C_out|, uplink points. Machine-phase time = (sampling + removal distance
+pass) wall time / m — the paper's "T (machine)" column; the coordinator
+phase (black-box clustering) is timed separately.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (census_like, emit, higgs_like, kdd_like,
+                               save_json, timed)
+from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
+from repro.core.kmeans_parallel import run_kmeans_parallel
+from repro.core.metrics import centralized_cost
+from repro.core.soccer import run_soccer
+from repro.data.synthetic import gaussian_mixture, shard_points
+
+M = 8
+
+
+def datasets(n: int):
+    gau, _, _ = gaussian_mixture(
+        GaussianMixtureSpec(n=n, dim=15, k=25, sigma=0.001))
+    return {
+        "Gau": gau,
+        "Hig~": higgs_like(n),
+        "KDD~": kdd_like(n),
+        "Cen~": census_like(n // 2),
+    }
+
+
+def run(n: int = 120_000, ks=(25,), quick: bool = False):
+    rows = []
+    for name, x in datasets(n).items():
+        parts = jnp.asarray(shard_points(x, M))
+        xg = jnp.asarray(x)
+        for k in ks:
+            eps = 0.1
+            t0 = time.perf_counter()
+            res = run_soccer(parts, SoccerParams(k=k, epsilon=eps, seed=0))
+            t_soccer = time.perf_counter() - t0
+            cost_s = float(centralized_cost(xg, jnp.asarray(res.centers)))
+            row = {"dataset": name, "k": k, "soccer_cost": cost_s,
+                   "soccer_rounds": res.rounds,
+                   "soccer_time_s": t_soccer,
+                   "soccer_centers": int(res.centers.shape[0]),
+                   "soccer_uplink": int(res.uplink.sum()),
+                   "eta": res.const.eta}
+            for r in ((1,) if quick else (1, 2, 5)):
+                t0 = time.perf_counter()
+                kp = run_kmeans_parallel(parts, k=k, rounds=r, seed=0)
+                t_kp = time.perf_counter() - t0
+                cost_kp = float(centralized_cost(
+                    xg, jnp.asarray(kp.centers)))
+                row[f"kmeans_par_{r}r_cost"] = cost_kp
+                row[f"kmeans_par_{r}r_time_s"] = t_kp
+                row[f"kmeans_par_{r}r_ratio"] = cost_kp / max(cost_s, 1e-30)
+            rows.append(row)
+            emit(f"table2/{name}/k{k}", row["soccer_time_s"] * 1e6,
+                 soccer_cost=f"{cost_s:.3g}",
+                 rounds=res.rounds,
+                 kmeanspar_1r_ratio=f"{row['kmeans_par_1r_cost']/max(cost_s,1e-30):.2f}")
+    save_json("table2", {"n": n, "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

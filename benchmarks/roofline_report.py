@@ -1,0 +1,57 @@
+"""Render the dry-run roofline table (EXPERIMENTS.md §Roofline source)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load(mesh: str = "single", tag: str = "baseline"):
+    rows = []
+    for f in sorted(DRYRUN.glob(f"{mesh}_*.json")):
+        r = json.loads(f.read_text())
+        if r.get("tag", "baseline") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_seconds(s):
+    if s == 0:
+        return "0"
+    if s < 1e-3:
+        return f"{s*1e6:.0f}us"
+    if s < 1:
+        return f"{s*1e3:.1f}ms"
+    return f"{s:.2f}s"
+
+
+def table(mesh: str = "single", tag: str = "baseline") -> str:
+    hdr = ("| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+           "useful | roofline frac | mem/chip | status |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in load(mesh, tag):
+        if r["status"] == "ok":
+            rf = r["roofline"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | "
+                f"{fmt_seconds(rf['t_compute_s'])} | "
+                f"{fmt_seconds(rf['t_memory_s'])} | "
+                f"{fmt_seconds(rf['t_collective_s'])} | "
+                f"{rf['bottleneck']} | {rf['useful_flops_frac']:.2f} | "
+                f"{rf['roofline_frac']:.3f} | "
+                f"{r['memory']['peak_per_device']/2**30:.1f}G | ok |")
+        else:
+            reason = r.get("reason", r.get("error", ""))[:40]
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - |"
+                         f" - | - | - | {r['status']}: {reason} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    tag = sys.argv[2] if len(sys.argv) > 2 else "baseline"
+    print(table(mesh, tag))

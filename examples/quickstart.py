@@ -1,0 +1,36 @@
+"""Quickstart: distributed k-means with SOCCER in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
+from repro.core.metrics import centralized_cost
+from repro.core.soccer import run_soccer
+from repro.data.synthetic import gaussian_mixture, shard_points
+
+
+def main():
+    # 100k points from a 25-Gaussian mixture (the paper's synthetic setup)
+    spec = GaussianMixtureSpec(n=100_000, dim=15, k=25, sigma=0.001)
+    x, _, means = gaussian_mixture(spec)
+
+    # partition across 8 "machines" and run SOCCER
+    parts = jnp.asarray(shard_points(x, m=8))
+    result = run_soccer(parts, SoccerParams(k=25, epsilon=0.1))
+
+    cost = float(centralized_cost(jnp.asarray(x),
+                                  jnp.asarray(result.centers)))
+    opt = float(centralized_cost(jnp.asarray(x), jnp.asarray(means)))
+    print(f"rounds used:        {result.rounds} "
+          f"(worst case {result.const.max_rounds})")
+    print(f"centers selected:   {result.centers.shape[0]} "
+          f"(k_plus={result.const.k_plus})")
+    print(f"points uploaded:    {int(result.uplink.sum())} "
+          f"(coordinator capacity eta={result.const.eta})")
+    print(f"k-means cost:       {cost:.4f}  (optimal ~{opt:.4f}, "
+          f"ratio {cost/opt:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

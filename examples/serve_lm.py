@@ -1,0 +1,61 @@
+"""Batched serving: prefill a prompt batch, decode with the KV/SSM caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-2.7b --steps 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.model import init_lm
+from repro.serve.decode import prefill, serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-2.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    fe = None
+    if cfg.n_frontend_tokens:
+        fe = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.n_frontend_tokens, cfg.d_model)) * 0.1
+
+    max_len = args.prompt_len + args.steps + 1
+    t0 = time.time()
+    logits, cache = prefill(params, cfg, prompt, frontend=fe,
+                            max_len=max_len)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} tokens "
+          f"in {t_prefill*1e3:.0f} ms")
+
+    step = jax.jit(lambda tok, c: serve_step(params, cfg, tok, c))
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.steps - 1):
+        tok, cache = step(tok, cache)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    seq = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.steps} tokens x {args.batch} seqs "
+          f"in {dt*1e3:.0f} ms "
+          f"({args.batch*args.steps/dt:.1f} tok/s)")
+    print("sample token ids:", seq[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Checkpointing: atomic, async, elastic (mesh-independent restore).
+
+Leaves are gathered to host numpy and written as one ``.npz`` keyed by the
+tree path, plus a ``manifest.json`` (step, shapes, dtypes, wall time).
+Writes go to ``<dir>/tmp-<step>`` and are renamed atomically, so a killed
+job never sees a torn checkpoint; ``keep`` old steps are retained for
+rollback. Restore takes a *template* tree (e.g. from ``jax.eval_shape``)
+and optional shardings — because leaves are stored as global host arrays,
+restoring onto a different mesh/machine-count (elastic scaling) is just a
+different ``device_put``; tests/test_checkpoint.py covers a 4-machine
+save -> 8-machine restore of SOCCER state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _path_key(path) -> str:
+    parts = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            parts.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            parts.append(str(e.idx))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            parts.append(str(e.name))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3,
+                 use_async: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.use_async = use_async
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, blocking: bool = False):
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        host = {(_path_key(p)): np.asarray(jax.device_get(v))
+                for p, v in flat}
+        self.wait()
+        if self.use_async and not blocking:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def _write(self, step: int, host: Dict[str, np.ndarray]):
+        tmp = self.dir / f"tmp-{step}"
+        final = self.dir / f"step-{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "leaves.npz", **host)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self.dir / f"step-{s}", ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self):
+        return [int(p.name.split("-")[1]) for p in self.dir.glob("step-*")
+                if (p / "manifest.json").exists()]
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        data = np.load(self.dir / f"step-{step}" / "leaves.npz")
+
+        def fill(path, leaf):
+            key = _path_key(path)
+            arr = data[key]
+            want = tuple(getattr(leaf, "shape", arr.shape))
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"checkpoint leaf {key}: {arr.shape} != {want}")
+            return arr
+
+        tree = jax.tree_util.tree_map_with_path(fill, template)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree

@@ -1,0 +1,56 @@
+"""SOCCER experiment presets mirroring the paper's Section 8 setup.
+
+The paper's synthetic benchmark draws ten million points from a
+k-spherical-Gaussian mixture in R^15 with Zipf(γ=1.5) cluster weights and
+σ=0.001; real datasets are multi-million-point UCI tables. This container
+is CPU-only and offline, so the benchmark presets scale n down while
+keeping every ratio (ε, δ, k, zipf γ, σ) from the paper; the full-size
+shapes are exercised by the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SoccerParams:
+    """Algorithm parameters (paper's notation)."""
+    k: int
+    epsilon: float = 0.1
+    delta: float = 0.1
+    n_machines: int = 8
+    max_rounds: int = 0          # 0 -> ceil(1/epsilon) (worst case + final)
+    lloyd_iters: int = 25        # black-box A: Lloyd iterations
+    blackbox: str = "kmeans"     # kmeans | minibatch
+    minibatch_size: int = 1024
+    sharded_coordinator: bool = False  # beyond-paper optimization
+    sharded_threshold: str = "bisect"  # bisect | topk threshold estimator
+    sharded_seeding: str = "d2"        # d2 | kmeanspar seeding
+    outlier_frac: float = 0.0          # robust finalize (paper §9)
+    straggler_rate: float = 0.0        # fraction of machines missing the
+                                       # per-round sampling deadline (ft)
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianMixtureSpec:
+    """Paper §8 synthetic data: k-Gaussian mixture, Zipf weights."""
+    n: int = 200_000
+    dim: int = 15
+    k: int = 25
+    sigma: float = 0.001
+    zipf_gamma: float = 1.5
+    seed: int = 17
+
+
+# Presets mirroring paper Table 2 rows (scaled n; same ε/δ/k).
+PAPER_TABLE2: Tuple[Tuple[GaussianMixtureSpec, SoccerParams], ...] = (
+    (GaussianMixtureSpec(k=25), SoccerParams(k=25, epsilon=0.05)),
+    (GaussianMixtureSpec(k=100), SoccerParams(k=100, epsilon=0.05)),
+)
+
+# Paper Table 3: tiny coordinator (ε=0.01) -> multiple rounds.
+PAPER_TABLE3: Tuple[Tuple[GaussianMixtureSpec, SoccerParams], ...] = (
+    (GaussianMixtureSpec(k=25), SoccerParams(k=25, epsilon=0.01)),
+)

@@ -1,0 +1,89 @@
+"""Machine/coordinator communication abstraction.
+
+The paper's coordinator model has ``m`` machines that talk only to a
+coordinator. On a TPU pod we realize this as SPMD over mesh axes; for
+single-device tests/benchmarks we fold the machine axis into a leading
+array axis. **The same algorithm code runs in both modes**: every
+per-machine array has shape ``(local_m, ...)`` where
+
+* ``VirtualCluster``:  ``local_m == m``   (one device holds all machines)
+* ``MeshCluster``:     ``local_m == 1``   (one machine per mesh shard,
+  collectives over the mesh axes)
+
+Only three primitives are needed by SOCCER/k-means‖/EIM11:
+
+* ``psum(x)``        — sum over the machine axis of a ``(local_m, ...)``
+                       array, returning the *replicated* unbatched result.
+                       This implements both "machines -> coordinator"
+                       uploads (offset-scatter + psum) and the final
+                       broadcast (the result is already replicated).
+* ``all_machines(x)`` — gather per-machine scalars/vecs: ``(local_m, ...)``
+                       -> ``(m, ...)`` replicated (used for the count
+                       vector that drives sample apportionment).
+* ``machine_ids()``  — global ids of the locally held machines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class VirtualCluster:
+    """All ``m`` machines folded into axis 0 of every array (single device)."""
+    m: int
+
+    @property
+    def local_m(self) -> int:
+        return self.m
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return jnp.sum(x, axis=0)
+
+    def all_machines(self, x: jax.Array) -> jax.Array:
+        return x
+
+    def machine_ids(self) -> jax.Array:
+        return jnp.arange(self.m, dtype=jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCluster:
+    """One machine per shard of the given mesh axes (use inside shard_map)."""
+    m: int
+    axis_names: Tuple[str, ...]
+    axis_sizes: Tuple[int, ...]
+
+    def __post_init__(self):
+        sz = 1
+        for s in self.axis_sizes:
+            sz *= s
+        assert sz == self.m, (self.m, self.axis_sizes)
+
+    @property
+    def local_m(self) -> int:
+        return 1
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return lax.psum(jnp.sum(x, axis=0), self.axis_names)
+
+    def all_machines(self, x: jax.Array) -> jax.Array:
+        g = lax.all_gather(x, self.axis_names, tiled=True)
+        return g
+
+    def machine_ids(self) -> jax.Array:
+        idx = jnp.int32(0)
+        stride = 1
+        # row-major global id over the machine axes (last axis fastest)
+        for name, size in zip(reversed(self.axis_names),
+                              reversed(self.axis_sizes)):
+            idx = idx + lax.axis_index(name).astype(jnp.int32) * stride
+            stride *= size
+        return idx[None]
+
+
+Comm = VirtualCluster  # structural typing; both classes share the interface

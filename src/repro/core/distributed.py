@@ -1,0 +1,94 @@
+"""Mesh (shard_map) deployment of SOCCER and friends.
+
+The algorithm code in core/ is written once against the comm abstraction;
+this module binds it to a real device mesh: every shard of the machine
+axes is one "machine" (local_m == 1), collectives run over the mesh.
+
+Used by the multi-pod dry-run (launch/dryrun.py lowers ``soccer_round``
+for the production meshes) and by the subprocess integration test, which
+checks Virtual == Mesh numerically on 8 host devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.soccer_paper import SoccerParams
+from repro.core import soccer as soccer_lib
+from repro.core.comm import MeshCluster
+from repro.core.soccer import (SoccerConstants, SoccerResult, SoccerState,
+                               derive_constants, flatten_centers, init_state)
+
+
+def mesh_cluster(mesh: Mesh, axis_names: Optional[Tuple[str, ...]] = None
+                 ) -> MeshCluster:
+    axis_names = tuple(axis_names or mesh.axis_names)
+    sizes = tuple(int(mesh.shape[a]) for a in axis_names)
+    m = int(np.prod(sizes))
+    return MeshCluster(m=m, axis_names=axis_names, axis_sizes=sizes)
+
+
+def _state_specs(axes: Tuple[str, ...]) -> SoccerState:
+    """PartitionSpec pytree for SoccerState: data sharded, rest replicated."""
+    sharded2 = P(axes, None)
+    return SoccerState(
+        x=P(axes, None, None), w=sharded2, alive=sharded2,
+        machine_ok=P(axes), key=P(), round_idx=P(), n_remaining=P(),
+        centers=P(), centers_valid=P(), v_hist=P(), n_hist=P(), uplink=P())
+
+
+def make_mesh_step(mesh: Mesh, const: SoccerConstants,
+                   axis_names: Optional[Tuple[str, ...]] = None,
+                   finalize: bool = False):
+    """jit(shard_map(soccer_round)) over the mesh's machine axes."""
+    comm = mesh_cluster(mesh, axis_names)
+    specs = _state_specs(comm.axis_names)
+    fn = soccer_lib.soccer_finalize if finalize else soccer_lib.soccer_round
+    body = functools.partial(fn, comm=comm, const=const)
+    mapped = jax.shard_map(body, mesh=mesh, in_specs=(specs,),
+                           out_specs=specs, check_vma=False)
+    return jax.jit(mapped)
+
+
+def run_soccer_mesh(x_parts: jax.Array, params: SoccerParams, mesh: Mesh, *,
+                    axis_names: Optional[Tuple[str, ...]] = None,
+                    key: Optional[jax.Array] = None,
+                    eta_override: int = 0) -> SoccerResult:
+    """Driver over a real mesh. ``x_parts`` is (m, p, d): one leading slice
+    per machine, sharded over the mesh's machine axes."""
+    comm = mesh_cluster(mesh, axis_names)
+    m, p, _ = x_parts.shape
+    assert m == comm.m, (m, comm.m)
+    const = derive_constants(m * p, p, params, eta_override, m=m)
+    key = jax.random.PRNGKey(params.seed) if key is None else key
+
+    state = init_state(jnp.asarray(x_parts), const, key)
+    specs = _state_specs(comm.axis_names)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda s: isinstance(s, P))
+    state = jax.device_put(state, shardings)
+
+    step = make_mesh_step(mesh, const, axis_names)
+    fin = make_mesh_step(mesh, const, axis_names, finalize=True)
+
+    rounds = 0
+    prev_n = int(state.n_remaining)
+    while rounds < const.max_rounds and int(state.n_remaining) > const.eta:
+        state = step(state)
+        rounds += 1
+        if int(state.n_remaining) >= prev_n:
+            break   # no-progress guard (see core/soccer.py)
+        prev_n = int(state.n_remaining)
+    state = fin(state)
+
+    return SoccerResult(
+        centers=flatten_centers(state), rounds=rounds, const=const,
+        n_hist=np.asarray(state.n_hist), v_hist=np.asarray(state.v_hist),
+        uplink=np.asarray(state.uplink), state=state)

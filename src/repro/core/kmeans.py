@@ -1,0 +1,79 @@
+"""Centralized weighted k-means black box A (paper's scikit-learn stand-in).
+
+Fully jit-compatible: weighted k-means++ seeding (Gumbel-max categorical
+D²-sampling, lax.scan over centers) followed by weighted Lloyd iterations
+(assignment + reduction through repro.kernels.ops, so the same Pallas
+kernels serve both the machines and the coordinator). Zero-weight rows are
+padding and never selected; empty clusters keep their previous center.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops
+
+
+def _categorical(key: jax.Array, p: jax.Array) -> jax.Array:
+    """Gumbel-max sample ∝ p (p >= 0, not necessarily normalized)."""
+    logp = jnp.where(p > 0, jnp.log(jnp.maximum(p, 1e-38)), -jnp.inf)
+    return jax.random.categorical(key, logp)
+
+
+def kmeans_plusplus(key: jax.Array, x: jax.Array, w: jax.Array,
+                    k: int) -> jax.Array:
+    """Weighted D²-seeding. Returns (k, d) initial centers."""
+    n, d = x.shape
+    k0, kseq = jax.random.split(key)
+    first = x[_categorical(k0, w)]
+
+    def step(carry, kk):
+        d2min, centers, i = carry
+        c_new = centers[i - 1]
+        delta = x - c_new[None, :]
+        d2_new = jnp.sum(delta * delta, axis=-1)
+        d2min = jnp.minimum(d2min, d2_new)
+        p = w * d2min
+        # all-zero mass (every point on a center) -> fall back to uniform w
+        p = jnp.where(jnp.sum(p) > 0, p, w)
+        nxt = x[_categorical(kk, p)]
+        centers = centers.at[i].set(nxt)
+        return (d2min, centers, i + 1), None
+
+    centers0 = jnp.zeros((k, d), x.dtype).at[0].set(first)
+    d2_init = jnp.full((n,), jnp.inf, jnp.float32)
+    keys = jax.random.split(kseq, max(k - 1, 1))
+    (_, centers, _), _ = lax.scan(
+        step, (d2_init, centers0, jnp.int32(1)), keys[: max(k - 1, 1)])
+    return centers if k > 1 else centers0
+
+
+def lloyd(x: jax.Array, w: jax.Array, centers: jax.Array, iters: int,
+          ) -> Tuple[jax.Array, jax.Array]:
+    """Weighted Lloyd. Returns (centers, final cost)."""
+    k = centers.shape[0]
+
+    def step(c, _):
+        _, assign = ops.min_dist(x, c)
+        sums, counts = ops.lloyd_reduce(x, w, assign, k)
+        new = jnp.where(counts[:, None] > 0,
+                        sums / jnp.maximum(counts[:, None], 1e-30),
+                        c.astype(jnp.float32))
+        return new.astype(c.dtype), None
+
+    centers, _ = lax.scan(step, centers, None, length=iters)
+    d2, _ = ops.min_dist(x, centers)
+    cost = jnp.sum(w.astype(jnp.float32) * d2)
+    return centers, cost
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key: jax.Array, x: jax.Array, w: jax.Array, k: int,
+           iters: int = 25) -> Tuple[jax.Array, jax.Array]:
+    """A(S, k): weighted k-means++ + Lloyd. Returns ((k, d) centers, cost)."""
+    init = kmeans_plusplus(key, x, w, k)
+    return lloyd(x, w, init, iters)

@@ -1,0 +1,113 @@
+"""k-means‖ (scalable k-means++, Bahmani et al. 2012) — the paper's baseline.
+
+Distributed seeding over the same machine/coordinator abstraction as
+SOCCER: per round every point is selected with probability
+min(1, l·w·d²(x,C)/φ(C)) (expected ``l`` selections, paper/MLLib default
+l = 2k), selections are scattered into the replicated center buffer, and
+after ``rounds`` rounds the oversampled set is weighed by a full
+assignment pass and reduced to k with weighted k-means. k-means‖ has **no
+stopping mechanism** — ``rounds`` is the hyper-parameter the paper
+criticizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.comm import VirtualCluster
+from repro.core.metrics import assignment_counts, distributed_cost
+from repro.core.reduce import reduce_to_k
+from repro.core.sampling import (exclusive_cumsum, global_weighted_choice,
+                                 scatter_at)
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class KMeansParallelResult:
+    centers: np.ndarray          # (k, d) final reduced centers
+    oversampled: np.ndarray      # (C, d) the seeding set (valid rows)
+    rounds: int
+    phi_hist: np.ndarray         # cost after each round
+    selected_hist: np.ndarray    # points added per round
+
+
+def _one_round(comm, key, x, w, centers, valid, base: int, cap: int,
+               l: float):
+    """One k-means‖ oversampling round; writes into rows [base, base+cap)."""
+    d2 = jax.vmap(lambda xx: ops.min_dist(xx, centers, valid)[0])(x)
+    phi = comm.psum(jnp.sum(w * d2, axis=1))
+    prob = jnp.minimum(1.0, l * w * d2 / jnp.maximum(phi, 1e-30))
+
+    ids = comm.machine_ids()
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, ids)
+    sel = jax.vmap(lambda kk, p: jax.random.uniform(kk, p.shape) < p)(
+        keys, prob)
+    sel = sel & (w > 0)
+
+    c_local = jnp.sum(sel, axis=1).astype(jnp.int32)
+    c_vec = comm.all_machines(c_local)
+    offs = exclusive_cumsum(jnp.minimum(c_vec, cap))
+    rank = jnp.cumsum(sel.astype(jnp.int32), axis=1) - 1
+    pos = base + offs[ids][:, None] + rank
+    take = sel & (pos < base + cap)               # overflow beyond cap dropped
+
+    ones = jnp.ones(x.shape[:2] + (1,), x.dtype)
+    vals = jnp.concatenate([x, ones], axis=-1)
+    buf = scatter_at(comm, vals, pos, take, centers.shape[0])
+    new_centers = jnp.where(buf[:, -1:] > 0, buf[:, :-1], centers)
+    new_valid = valid | (buf[:, -1] > 0)
+    return new_centers, new_valid, phi, jnp.sum(jnp.minimum(c_vec, cap))
+
+
+def run_kmeans_parallel(x_parts: jax.Array, k: int, rounds: int, *,
+                        l: Optional[float] = None,
+                        w: Optional[jax.Array] = None,
+                        comm=None, key: Optional[jax.Array] = None,
+                        lloyd_iters: int = 25,
+                        oversample_slack: float = 3.0,
+                        seed: int = 0) -> KMeansParallelResult:
+    """Driver (VirtualCluster by default); x_parts is (m, p, d)."""
+    m, p, d = x_parts.shape
+    comm = comm or VirtualCluster(m)
+    x = jnp.asarray(x_parts, jnp.float32)
+    w = jnp.ones((m, p), jnp.float32) if w is None else w
+    l = float(l if l is not None else 2 * k)
+    cap = int(oversample_slack * l) + 16
+    rows = 1 + rounds * cap
+    key = jax.random.PRNGKey(seed) if key is None else key
+
+    @jax.jit
+    def seed_init(kk):
+        c0 = global_weighted_choice(kk, comm, w, x)
+        centers = jnp.zeros((rows, d), jnp.float32).at[0].set(c0)
+        valid = jnp.zeros((rows,), bool).at[0].set(True)
+        return centers, valid
+
+    step = jax.jit(functools.partial(_one_round, comm, l=l, cap=cap),
+                   static_argnames=("base",))
+
+    k0, key = jax.random.split(key)
+    centers, valid = seed_init(k0)
+    phi_hist, sel_hist = [], []
+    for r in range(rounds):
+        kr, key = jax.random.split(key)
+        centers, valid, phi, nsel = step(kr, x, w, centers, valid,
+                                         base=1 + r * cap)
+        phi_hist.append(float(phi))
+        sel_hist.append(int(nsel))
+
+    counts = assignment_counts(comm, x, w, centers, valid)
+    kf, key = jax.random.split(key)
+    final = reduce_to_k(kf, centers, counts * valid, k, lloyd_iters)
+
+    return KMeansParallelResult(
+        centers=np.asarray(final),
+        oversampled=np.asarray(centers)[np.asarray(valid)],
+        rounds=rounds, phi_hist=np.asarray(phi_hist),
+        selected_hist=np.asarray(sel_hist))

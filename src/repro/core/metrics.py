@@ -1,0 +1,49 @@
+"""Cost / assignment utilities (centralized and distributed)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def centralized_cost(x: jax.Array, centers: jax.Array,
+                     w: Optional[jax.Array] = None) -> jax.Array:
+    """sum_i w_i * min_j ||x_i - c_j||^2 on one device."""
+    d2, _ = ops.min_dist(x, centers)
+    if w is None:
+        return jnp.sum(d2)
+    return jnp.sum(w.astype(jnp.float32) * d2)
+
+
+def distributed_cost(comm, x: jax.Array, w: jax.Array,
+                     centers: jax.Array,
+                     centers_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Global k-means cost of replicated ``centers`` over sharded ``x``.
+
+    Args:
+      x: (local_m, p, d); w: (local_m, p) weights (0 = ignore).
+    """
+    def per_machine(xx, ww):
+        d2, _ = ops.min_dist(xx, centers, centers_valid)
+        return jnp.sum(ww.astype(jnp.float32) * d2)
+
+    local = jax.vmap(per_machine)(x, w)           # (local_m,)
+    return comm.psum(local)
+
+
+def assignment_counts(comm, x: jax.Array, w: jax.Array, centers: jax.Array,
+                      centers_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Per-center total assigned weight of the full dataset (replicated)."""
+    k = centers.shape[0]
+
+    def per_machine(xx, ww):
+        _, idx = ops.min_dist(xx, centers, centers_valid)
+        _, counts = ops.lloyd_reduce(xx, ww, idx, k)
+        return counts
+
+    local = jax.vmap(per_machine)(x, w)           # (local_m, k)
+    return comm.psum(local)

@@ -1,0 +1,51 @@
+"""MiniBatchKMeans black box (paper Appendix D.2's faster coordinator).
+
+Sculley-style mini-batch k-means with per-center learning rates 1/N_c,
+jit-compatible (lax.scan over steps). Used to reproduce the paper's D.2
+tables, including its caveat: the mini-batch black box is faster but can
+fail on hard datasets (KDDCup-like), which our benchmark mirrors.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.kmeans import kmeans_plusplus
+from repro.kernels import ops
+
+
+@functools.partial(jax.jit, static_argnames=("k", "batch", "steps"))
+def minibatch_kmeans(key: jax.Array, x: jax.Array, w: jax.Array, k: int,
+                     batch: int = 1024, steps: int = 60
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Returns ((k, d) centers, cost on the full weighted set)."""
+    n, d = x.shape
+    kinit, kloop = jax.random.split(key)
+    centers = kmeans_plusplus(kinit, x[: min(n, 16 * k)], w[: min(n, 16 * k)], k)
+    centers = centers.astype(jnp.float32)
+
+    logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-38)), -jnp.inf)
+
+    def step(carry, kk):
+        c, n_c = carry
+        idx = jax.random.categorical(kk, logw, shape=(batch,))
+        xb = x[idx].astype(jnp.float32)
+        wb = jnp.ones((batch,), jnp.float32)
+        _, assign = ops.min_dist(xb, c)
+        sums, counts = ops.lloyd_reduce(xb, wb, assign, k)
+        n_c = n_c + counts
+        lr = jnp.where(n_c > 0, counts / jnp.maximum(n_c, 1.0), 0.0)
+        mean_b = sums / jnp.maximum(counts[:, None], 1e-30)
+        c = c + lr[:, None] * (jnp.where(counts[:, None] > 0, mean_b, c) - c)
+        return (c, n_c), None
+
+    keys = jax.random.split(kloop, steps)
+    (centers, _), _ = lax.scan(step, (centers, jnp.zeros((k,), jnp.float32)),
+                               keys)
+    d2, _ = ops.min_dist(x, centers)
+    cost = jnp.sum(w.astype(jnp.float32) * d2)
+    return centers.astype(x.dtype), cost

@@ -1,0 +1,38 @@
+"""Weighted reduction of an oversampled center set to exactly k centers.
+
+Both SOCCER and k-means‖ output more than k centers; the standard recipe
+(paper §2, Guha et al. 2003 Thm. 4) weighs each center by the mass of data
+assigned to it and runs a centralized *weighted* k-means — this preserves
+approximation guarantees up to constants. The weighing pass is distributed
+(one assignment sweep + psum); the reduction itself is tiny (|C_out| ≈
+I·k_plus points).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans
+from repro.core.metrics import assignment_counts
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def reduce_to_k(key: jax.Array, centers: jax.Array, weights: jax.Array,
+                k: int, iters: int = 25) -> jax.Array:
+    """Weighted k-means over the center set itself -> (k, d)."""
+    out, _ = kmeans(key, centers, weights, k, iters)
+    return out
+
+
+def weighted_reduce(key: jax.Array, comm, x: jax.Array, w: jax.Array,
+                    centers: jax.Array,
+                    centers_valid: Optional[jax.Array] = None,
+                    *, k: int, iters: int = 25) -> jax.Array:
+    """Full pipeline: weigh C_out by data assignment, reduce to k centers."""
+    counts = assignment_counts(comm, x, w, centers, centers_valid)
+    if centers_valid is not None:
+        counts = counts * centers_valid.astype(counts.dtype)
+    return reduce_to_k(key, centers, counts, k, iters)

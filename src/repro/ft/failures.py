@@ -1,0 +1,66 @@
+"""Machine-failure and straggler handling for SOCCER.
+
+The paper's conclusion flags "robustness against ... machine failures" as
+future work; we implement the two mechanisms the algorithm naturally
+admits:
+
+* **Hard failure** (machine dies, its shard is lost): mark
+  ``machine_ok[j] = False``. The round math is already failure-aware — the
+  count vector drives apportionment, HT weights stay consistent, and the
+  coordinator simply estimates over the surviving population. Cost
+  degrades gracefully with lost data mass (tests/test_ft.py measures it).
+* **Straggler deadline** (machine misses the sampling deadline): the
+  per-round ``respond`` mask drops it from *sampling only* — it still
+  receives the broadcast and performs removal, so no data is lost; the
+  sample stays exact-size over responders.
+
+Checkpoint/restart: SoccerState is a plain pytree, so the Checkpointer
+persists round boundaries; restore is elastic across machine counts via
+``reshard_state``.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.soccer import SoccerState
+
+
+def fail_machines(state: SoccerState, ids: Sequence[int]) -> SoccerState:
+    """Mark machines failed (VirtualCluster layout: axis-0 machine ids)."""
+    ok = np.asarray(state.machine_ok).copy()
+    for j in ids:
+        ok[j] = False
+    return state._replace(machine_ok=jnp.asarray(ok))
+
+
+def surviving_fraction(state: SoccerState) -> float:
+    ok = np.asarray(state.machine_ok)
+    alive = np.asarray(state.alive)
+    return float(alive[ok].sum()) / max(float(alive.size), 1.0)
+
+
+def reshard_state(state: SoccerState, m_new: int) -> SoccerState:
+    """Elastic restore: repartition (m, p, ...) machine arrays onto m_new
+    machines (keeps global point order; pads with removed slots)."""
+    def regroup(a, fill=0):
+        a = np.asarray(a)
+        if a.ndim < 2:
+            return jnp.asarray(a)
+        m, p = a.shape[:2]
+        flat = a.reshape((m * p,) + a.shape[2:])
+        p_new = -(-(m * p) // m_new)
+        pad = m_new * p_new - m * p
+        if pad:
+            pad_block = np.full((pad,) + flat.shape[1:], fill, a.dtype)
+            flat = np.concatenate([flat, pad_block], axis=0)
+        return jnp.asarray(flat.reshape((m_new, p_new) + a.shape[2:]))
+
+    return state._replace(
+        x=regroup(state.x),
+        w=regroup(state.w),
+        alive=regroup(state.alive, fill=False),
+        machine_ok=jnp.ones((m_new,), bool))

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused weighted assign-reduce for one Lloyd step.
+
+Given points, weights, and an assignment vector, accumulates per-center
+weighted sums and counts. The accumulators (k, d) and (k,) live in VMEM for
+the whole grid walk (k*d is small for clustering workloads: k_plus ~ a few
+hundred, d <= a few hundred -> <= ~1 MiB), so the kernel streams each point
+panel from HBM exactly once, builds the (bn, k) weighted one-hot in
+registers/VMEM and drives the (k, bn) @ (bn, d) product through the MXU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lloyd_kernel(x_ref, w_ref, a_ref, sums_ref, cnt_ref, *, k: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros(sums_ref.shape, jnp.float32)
+        cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)              # (bn, d)
+    w = w_ref[...].astype(jnp.float32)              # (bn,)
+    a = a_ref[...]                                  # (bn,) int32
+
+    centers = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k), 1)
+    onehot = (a[:, None] == centers).astype(jnp.float32) * w[:, None]
+
+    sums_ref[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (k, d)
+    cnt_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def lloyd_reduce_pallas(x: jax.Array, w: jax.Array, assign: jax.Array,
+                        k: int, *, interpret: bool = False
+                        ) -> Tuple[jax.Array, jax.Array]:
+    n, d = x.shape
+    bn = 512 if d <= 256 else 256
+    bn = min(bn, max(128, -(-n // 128) * 128))
+    n_pad = -n % bn
+    xp = jnp.pad(x, ((0, n_pad), (0, 0)))
+    wp = jnp.pad(w, (0, n_pad))                      # pad weight 0 -> no-op rows
+    ap = jnp.pad(assign, (0, n_pad))
+
+    grid = (xp.shape[0] // bn,)
+    sums, counts = pl.pallas_call(
+        functools.partial(_lloyd_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wp, ap)
+    return sums, counts

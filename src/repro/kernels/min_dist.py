@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused pairwise min squared-distance (+ argmin).
+
+This is the machines' per-round hot spot in SOCCER (the removal pass
+``min_j rho(x_i, C_iter)^2``) and the assignment step of Lloyd. The GPU
+reference implementations materialize the full (n, k) distance matrix in
+HBM; on TPU we instead tile (bn x d) point panels and (bk x d) center
+panels into VMEM, drive the cross term ``-2 x @ c^T`` through the MXU with
+an f32 accumulator, and keep a running (min, argmin) per point across
+center panels — the (n, k) matrix never exists. Arithmetic intensity per
+point block is O(k·d / d) = O(k) flops/byte, so for k >= ~64 the kernel is
+MXU-bound rather than HBM-bound.
+
+Grid: (n/bn, k/bk), center panel innermost, so each point panel's running
+min stays resident in VMEM across all center panels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+_BIG = 3.0e38  # plain float so the kernel captures no traced constants
+
+
+def _min_dist_kernel(x_ref, c_ref, cv_ref, d2_ref, idx_ref, *, bk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        d2_ref[...] = jnp.full(d2_ref.shape, _BIG, jnp.float32)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, jnp.int32)
+
+    x = x_ref[...].astype(jnp.float32)            # (bn, d)
+    c = c_ref[...].astype(jnp.float32)            # (bk, d)
+    cv = cv_ref[...]                              # (bk,) bool as int8
+
+    # ||x||^2 - 2 x.c + ||c||^2 ; cross term on the MXU.
+    dots = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)    # (bn, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]          # (1, bk)
+    d2 = x2 - 2.0 * dots + c2                     # (bn, bk)
+    d2 = jnp.where(cv[None, :] != 0, d2, _BIG)
+
+    local_min = jnp.min(d2, axis=1)
+    local_arg = jnp.argmin(d2, axis=1).astype(jnp.int32) + j * bk
+
+    prev_min = d2_ref[...]
+    better = local_min < prev_min
+    idx_ref[...] = jnp.where(better, local_arg, idx_ref[...])
+    d2_ref[...] = jnp.where(better, local_min, prev_min)
+
+
+def _block_sizes(d: int) -> Tuple[int, int]:
+    """Pick (bn, bk) so x/c panels + the (bn,bk) panel fit comfortably in VMEM."""
+    # budget ~4 MiB for the three f32 panels
+    if d <= 128:
+        return 1024, 256
+    if d <= 256:
+        return 512, 256
+    return 256, 128
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def min_dist_pallas(x: jax.Array, c: jax.Array,
+                    c_valid: Optional[jax.Array] = None,
+                    *, interpret: bool = False
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Pallas min-distance; pads n/k to block multiples, trims on return."""
+    n, d = x.shape
+    k = c.shape[0]
+    if c_valid is None:
+        c_valid = jnp.ones((k,), jnp.int8)
+    else:
+        c_valid = c_valid.astype(jnp.int8)
+
+    bn, bk = _block_sizes(d)
+    bn = min(bn, max(128, -(-n // 128) * 128))
+    bk = min(bk, max(128, -(-k // 128) * 128))
+    n_pad = -n % bn
+    k_pad = -k % bk
+    xp = jnp.pad(x, ((0, n_pad), (0, 0)))
+    cp = jnp.pad(c, ((0, k_pad), (0, 0)))
+    cvp = jnp.pad(c_valid, (0, k_pad))  # padded centers invalid
+
+    grid = (xp.shape[0] // bn, cp.shape[0] // bk)
+    d2, idx = pl.pallas_call(
+        functools.partial(_min_dist_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((xp.shape[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp, cp, cvp)
+    return jnp.maximum(d2[:n], 0.0), idx[:n]

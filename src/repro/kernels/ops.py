@@ -1,0 +1,57 @@
+"""Jit'd public wrappers over the clustering kernels.
+
+Backend resolution:
+  * ``auto``   — compiled Pallas on TPU; pure-jnp XLA oracle elsewhere
+                 (this CPU container). TPU is the TARGET; interpret mode is
+                 the validation vehicle.
+  * ``ref``    — force the jnp oracle.
+  * ``pallas`` — force Pallas (compiled on TPU, interpret=True elsewhere).
+
+The oracle and the kernels agree to float tolerance for every shape/dtype
+in the test sweeps; callers never see which backend ran.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.lloyd import lloyd_reduce_pallas
+from repro.kernels.min_dist import min_dist_pallas
+
+_MAX_PALLAS_D = 512  # larger feature dims fall back to the XLA path
+
+
+def _backend(explicit: Optional[str]) -> str:
+    if explicit:
+        return explicit
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def min_dist(x: jax.Array, c: jax.Array,
+             c_valid: Optional[jax.Array] = None,
+             *, backend: Optional[str] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """(n,) min squared distance to valid centers and (n,) argmin."""
+    b = _backend(backend)
+    if b == "pallas" and x.shape[-1] <= _MAX_PALLAS_D:
+        interpret = jax.default_backend() != "tpu"
+        return min_dist_pallas(x, c, c_valid, interpret=interpret)
+    return ref.min_dist_ref(x, c, c_valid)
+
+
+def lloyd_reduce(x: jax.Array, w: jax.Array, assign: jax.Array, k: int,
+                 *, backend: Optional[str] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Weighted per-center (sums, counts) for a Lloyd step."""
+    b = _backend(backend)
+    if b == "pallas" and x.shape[-1] <= _MAX_PALLAS_D:
+        interpret = jax.default_backend() != "tpu"
+        return lloyd_reduce_pallas(x, w, assign, k, interpret=interpret)
+    return ref.lloyd_reduce_ref(x, w, assign, k)

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantics of record: every Pallas kernel is validated against
+these under shape/dtype sweeps (tests/test_kernels_*.py), and they are also
+the XLA execution path on non-TPU backends.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+_CHUNK_K = 4096  # center-panel size; bounds the live (n, chunk) panel
+
+
+def min_dist_ref(x: jax.Array, c: jax.Array,
+                 c_valid: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Fused pairwise min squared-distance.
+
+    Large center sets are processed in panels with a running (min, argmin)
+    — the same streaming structure as the Pallas kernel — so the full
+    (n, k) matrix never materializes (EIM11 grows k into the 10^5 range).
+
+    Args:
+      x: (n, d) points.
+      c: (k, d) centers.
+      c_valid: optional (k,) bool mask; invalid centers are ignored.
+
+    Returns:
+      d2:  (n,) float32 — min_j ||x_i - c_j||^2 over valid centers (>= 0).
+      idx: (n,) int32   — argmin_j.
+    """
+    xf = x.astype(jnp.float32)
+    k = c.shape[0]
+    if c_valid is None:
+        c_valid = jnp.ones((k,), bool)
+
+    def panel(cf, cv):
+        c2 = jnp.sum(cf * cf, axis=-1)
+        d2 = -2.0 * (xf @ cf.T) + c2[None, :]
+        d2 = jnp.where(cv[None, :], d2, jnp.inf)
+        loc = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+        return jnp.min(d2, axis=-1), loc
+
+    if k <= _CHUNK_K:
+        dmin, idx = panel(c.astype(jnp.float32), c_valid)
+    else:
+        pad = -k % _CHUNK_K
+        cp = jnp.pad(c.astype(jnp.float32), ((0, pad), (0, 0)))
+        cvp = jnp.pad(c_valid, (0, pad))
+        nc = cp.shape[0] // _CHUNK_K
+        cp = cp.reshape(nc, _CHUNK_K, -1)
+        cvp = cvp.reshape(nc, _CHUNK_K)
+
+        def body(carry, ch):
+            best, barg, j = carry
+            cf, cv = ch
+            dmin, loc = panel(cf, cv)
+            better = dmin < best
+            barg = jnp.where(better, loc + j * _CHUNK_K, barg)
+            best = jnp.where(better, dmin, best)
+            return (best, barg, j + 1), None
+
+        n = xf.shape[0]
+        init = (jnp.full((n,), jnp.inf, jnp.float32),
+                jnp.zeros((n,), jnp.int32), jnp.int32(0))
+        (dmin, idx, _), _ = jax.lax.scan(body, init, (cp, cvp))
+
+    x2 = jnp.sum(xf * xf, axis=-1)
+    return jnp.maximum(dmin + x2, 0.0), idx
+
+
+def lloyd_reduce_ref(x: jax.Array, w: jax.Array, assign: jax.Array,
+                     k: int) -> Tuple[jax.Array, jax.Array]:
+    """Weighted per-center accumulation for one Lloyd step.
+
+    Args:
+      x: (n, d) points.
+      w: (n,) float weights (0 for padded/removed points).
+      assign: (n,) int32 center assignment in [0, k).
+
+    Returns:
+      sums:   (k, d) float32 — sum of w_i * x_i per center.
+      counts: (k,)  float32 — sum of w_i per center.
+    """
+    if k > _CHUNK_K:
+        # large center sets (EIM11): scatter-reduce, no (n, k) one-hot
+        wf = w.astype(jnp.float32)
+        sums = jax.ops.segment_sum(x.astype(jnp.float32) * wf[:, None],
+                                   assign, num_segments=k)
+        counts = jax.ops.segment_sum(wf, assign, num_segments=k)
+        return sums, counts
+    onehot = (assign[:, None] == jnp.arange(k, dtype=assign.dtype)[None, :])
+    onehot = onehot.astype(jnp.float32) * w.astype(jnp.float32)[:, None]
+    sums = onehot.T @ x.astype(jnp.float32)
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts

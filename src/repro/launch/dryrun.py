@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init); they are deliberately not in conftest.py or
+pyproject — smoke tests and benches see 1 device, only the dry-run sees
+512 placeholders.
+
+For every applicable cell this lowers the cell's step function
+(train_step / prefill / serve_step) against ShapeDtypeStruct inputs with
+the production shardings, compiles it, and records:
+
+  * memory_analysis()  — per-device bytes (proves it fits / doesn't),
+  * cost_analysis()    — per-device flops + HBM bytes,
+  * collective bytes   — parsed from the optimized HLO (incl. while-loop
+    trip-count multiplication),
+  * the three roofline terms + bottleneck + useful-flops ratio.
+
+Results append to benchmarks/results/dryrun/<mesh>_<arch>_<shape>.json so
+a crash loses one cell, not the run.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k --mesh single          # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import functools
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED_ARCHS, cell_is_applicable, get_config,
+                           get_shape, SHAPES)
+from repro.launch.input_specs import cell_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import init_cache, lm_prefill
+from repro.roofline.analysis import analyze_compiled, model_flops_for
+from repro.serve.decode import serve_step
+from repro.sharding.activations import activation_mesh
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import make_train_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / \
+    "benchmarks" / "results" / "dryrun"
+
+
+def _step_fn(cfg, shape):
+    if shape.kind == "train":
+        step = make_train_step(cfg, OptConfig(name=cfg.optimizer))
+
+        def train(state, batch):
+            return step(state, batch)
+        return train
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            logits, cache = lm_prefill(
+                params, cfg, batch["tokens"],
+                frontend=batch.get("frontend"), max_len=shape.seq_len)
+            return logits
+        return prefill_fn
+
+    def decode_fn(params, batch, cache):
+        tok, cache = serve_step(params, cfg, batch["tokens"], cache)
+        return tok, cache
+    return decode_fn
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             tag: str = "baseline", microbatches: int = 0,
+             remat: str = "") -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if microbatches:
+        cfg = dataclasses.replace(cfg, microbatches=microbatches)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = get_shape(shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+           "time": time.strftime("%Y-%m-%d %H:%M:%S")}
+    if not cell_is_applicable(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = "long_500k needs sub-quadratic attention " \
+            "(DESIGN.md §Arch-applicability)"
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        structs, shardings = cell_specs(cfg, shape, mesh)
+        fn = _step_fn(cfg, shape)
+        tp_axis = "__none__" if cfg.sharding_policy == "fsdp" else "model"
+        # donate the mutable aggregate (train: state, decode: cache) — the
+        # production calling convention; halves those cells' footprints
+        donate = (0,) if shape.kind == "train" else \
+            (2,) if shape.kind == "decode" else ()
+        with mesh, activation_mesh(mesh, tp_axis=tp_axis):
+            lowered = jax.jit(fn, in_shardings=shardings,
+                              donate_argnums=donate).lower(*structs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        roof = analyze_compiled(compiled, model_flops_for(cfg, shape), chips)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "peak_per_device": int(mem.argument_size_in_bytes +
+                                       mem.temp_size_in_bytes +
+                                       mem.output_size_in_bytes -
+                                       mem.alias_size_in_bytes),
+            },
+            "roofline": roof.as_dict(),
+        })
+    except Exception as e:  # noqa: BLE001 — record, don't kill the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def save(rec: dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['mesh']}_{rec['arch']}_{rec['shape']}"
+    if rec.get("tag", "baseline") != "baseline":
+        name += f"_{rec['tag']}"
+    (RESULTS / f"{name}.json").write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                suffix = "" if args.tag == "baseline" else f"_{args.tag}"
+                out = RESULTS / \
+                    f"{mesh_kind}_{arch}_{shape_name}{suffix}.json"
+                if args.skip_done and out.exists() and \
+                        json.loads(out.read_text()).get("status") in \
+                        ("ok", "skipped"):
+                    continue
+                rec = run_cell(arch, shape_name, mesh_kind, args.tag,
+                               args.microbatches, args.remat)
+                save(rec)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" frac={r['roofline_frac']:.3f}"
+                             f" mem={rec['memory']['peak_per_device']/2**30:.2f}GiB"
+                             f" compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                    failures += 1
+                print(f"[{mesh_kind:8s}] {arch:24s} {shape_name:12s} "
+                      f"{status}{extra}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,214 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+Nothing here allocates: parameters come from ``jax.eval_shape(init_lm)``,
+caches from ``jax.eval_shape(init_cache)``; shardings from the
+Partitioner's path rules plus the cache/batch rules below. ``[audio]`` and
+``[vlm]`` cells get stub-frontend embeddings (precomputed frames/patches),
+per the assignment.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models.model import init_cache, init_lm
+from repro.sharding.partition import Partitioner
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_state
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    names = (axes,) if isinstance(axes, str) else axes
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([shape[a] for a in names]))
+
+
+def _fit(mesh: Mesh, dim: int, axes):
+    """Cascading fit: largest contiguous sub-tuple of the axes whose size
+    divides ``dim`` (multi-pod batch 256 takes ('data','model')=256 after
+    'pod' is dropped; decode batch 128 takes ('pod','data')=32; otherwise
+    caches/activations would replicate)."""
+    if not axes:
+        return None
+    names = (axes,) if isinstance(axes, str) else tuple(axes)
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cands = []
+    for i in range(len(names)):
+        for j in range(i + 1, len(names) + 1):
+            sub = names[i:j]
+            size = int(np.prod([shape[a] for a in sub]))
+            cands.append((size, sub))
+    for size, sub in sorted(cands, key=lambda t: -t[0]):
+        if dim % size == 0:
+            return sub if len(sub) > 1 else sub[0]
+    return None
+
+
+def make_partitioner(mesh: Mesh, cfg: ArchConfig) -> Partitioner:
+    """Per-arch policy: '2d' = FSDP x TP; 'fsdp' = batch/storage over ALL
+    axes, no tensor parallelism (small or TP-indivisible models: qwen2's
+    12 heads, whisper's 51865 vocab, xlstm's 4 heads)."""
+    if cfg.sharding_policy == "fsdp":
+        return Partitioner(mesh, fsdp_axes=tuple(mesh.axis_names),
+                           tp_axis="__none__")
+    return Partitioner(mesh)
+
+
+# ----------------------------------------------------------- batch specs
+def batch_structs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:  # decode: one new token against a seq_len cache
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    if cfg.n_frontend_tokens:
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frontend_tokens, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def batch_shardings(mesh: Mesh, part: Partitioner, cfg: ArchConfig,
+                    structs: Dict[str, Any]) -> Dict[str, Any]:
+    bspec = part.batch_spec()
+
+    def shard(st):
+        ax = _fit(mesh, st.shape[0], bspec)
+        return NamedSharding(mesh, P(*((ax,) + (None,) * (st.ndim - 1))))
+
+    return jax.tree.map(shard, structs)
+
+
+# ----------------------------------------------------------- cache specs
+_TRAILING = {"k": 3, "v": 3, "ssd": 3, "conv": 2, "c": 3, "n": 2, "m": 1,
+             "h": 2, "t": 0}
+
+
+def cache_shardings(mesh: Mesh, part: Partitioner, cfg: ArchConfig,
+                    cache_structs) -> Any:
+    """Batch dim -> fsdp axes; heads/head_dim -> 'model' when divisible."""
+    bspec, tp = part.batch_spec(), part.tp
+
+    def leaf(path, st):
+        keys = [str(e.key) for e in path
+                if isinstance(e, jax.tree_util.DictKey)]
+        name = keys[-1] if keys else ""
+        nd = st.ndim
+        trail = _TRAILING.get(name)
+        if trail is None or nd < trail + (0 if name == "t" else 1):
+            return NamedSharding(mesh, P(*((None,) * nd)))
+        if name == "t":
+            return NamedSharding(mesh, P(None))
+        bdim = nd - trail - 1
+        spec = [None] * nd
+        spec[bdim] = _fit(mesh, st.shape[bdim], bspec)
+        if name in ("k", "v"):           # (..., B, W, KV, hd)
+            kv_ax = _fit(mesh, st.shape[nd - 2], tp)
+            spec[nd - 2] = kv_ax
+            if kv_ax is None:
+                spec[nd - 1] = _fit(mesh, st.shape[nd - 1], tp)
+        elif name == "ssd":              # (..., B, H, P, N)
+            spec[nd - 3] = _fit(mesh, st.shape[nd - 3], tp)
+        elif name == "conv":             # (..., B, w, C)
+            spec[nd - 1] = _fit(mesh, st.shape[nd - 1], tp)
+        elif name == "c" and nd >= 3:    # mlstm (..., B, H, hd, hd)
+            h_ax = _fit(mesh, st.shape[nd - 3], tp)
+            spec[nd - 3] = h_ax
+            if h_ax is None:
+                spec[nd - 1] = _fit(mesh, st.shape[nd - 1], tp)
+        elif name in ("n", "h"):         # (..., B, H, hd)
+            h_ax = _fit(mesh, st.shape[nd - 2], tp)
+            spec[nd - 2] = h_ax
+            if h_ax is None:
+                spec[nd - 1] = _fit(mesh, st.shape[nd - 1], tp)
+        elif name == "m":                # (..., B, H)
+            spec[nd - 1] = _fit(mesh, st.shape[nd - 1], tp)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_structs)
+
+
+# -------------------------------------------------------- state specs
+def opt_shardings(mesh: Mesh, param_specs, params_st, opt_name: str):
+    """Optimizer-state shardings mirror the parameter specs.
+
+    AdamW m/v share the param spec; Adafactor's vr drops the last dim's
+    entry and vc the second-to-last — but only for leaves the optimizer
+    actually factors (same ``_factored`` predicate), else a dense v.
+    """
+    from repro.train.optimizer import OptConfig, _factored
+
+    def as_shard(spec):
+        return NamedSharding(mesh, spec)
+
+    if opt_name == "adamw":
+        m = jax.tree.map(as_shard, param_specs,
+                         is_leaf=lambda s: isinstance(s, P))
+        return {"m": m, "v": m}
+
+    min_dim = OptConfig().adafactor_min_dim
+
+    def v_spec(spec, leaf):
+        parts = tuple(spec)
+        if _factored(leaf.shape, min_dim):
+            return {"vr": as_shard(P(*parts[:-1])),
+                    "vc": as_shard(P(*(parts[:-2] + parts[-1:])))}
+        return {"v": as_shard(P(*parts))}
+
+    return {"v": jax.tree.map(v_spec, param_specs, params_st,
+                              is_leaf=lambda s: isinstance(s, P))}
+
+
+# ------------------------------------------------------------ assembly
+def cell_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+               opt: Optional[OptConfig] = None):
+    """Returns (arg_structs, arg_shardings) for the cell's step function.
+
+    train  -> args (state, batch)
+    prefill-> args (params, batch)
+    decode -> args (params, batch, cache)
+    """
+    part = make_partitioner(mesh, cfg)
+    key = jax.random.PRNGKey(0)
+    params_st = jax.eval_shape(functools.partial(init_lm, cfg=cfg), key)
+    p_specs = part.specs(params_st)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                           is_leaf=lambda s: isinstance(s, P))
+    b_st = batch_structs(cfg, shape)
+    b_shard = batch_shardings(mesh, part, cfg, b_st)
+
+    if shape.kind == "train":
+        opt = opt or OptConfig(name=cfg.optimizer)
+        opt_st = jax.eval_shape(
+            functools.partial(init_opt_state, opt=opt), params_st)
+        state_st = {"params": params_st, "opt": opt_st,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        state_shard = {"params": p_shard,
+                       "opt": opt_shardings(mesh, p_specs, params_st,
+                                            opt.name),
+                       "step": NamedSharding(mesh, P())}
+        return (state_st, b_st), (state_shard, b_shard)
+
+    if shape.kind == "prefill":
+        return (params_st, b_st), (p_shard, b_shard)
+
+    # decode
+    cache_st = jax.eval_shape(
+        functools.partial(init_cache, cfg, shape.global_batch,
+                          shape.seq_len))
+    c_shard = cache_shardings(mesh, part, cfg, cache_st)
+    return (params_st, b_st, cache_st), (p_shard, b_shard, c_shard)

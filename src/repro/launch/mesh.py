@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips ('data','model'); multi-pod: 2x16x16 = 512
+('pod','data','model'). Defined as a FUNCTION so importing this module
+never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import; tests/benches see the single real device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
+    """Small mesh over however many (host) devices a test process has."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def fsdp_axes(mesh: Mesh):
+    return tuple(a for a in mesh.axis_names if a != "model")

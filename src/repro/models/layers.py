@@ -1,0 +1,123 @@
+"""Shared layers: norms, projections, RoPE, gated MLP, embeddings.
+
+Pure-function style: ``init_*`` returns a dict pytree of parameters;
+``*_apply`` consumes it. No flax/haiku dependency — parameters are plain
+nested dicts so the sharding rules (repro.sharding) can map leaf paths to
+PartitionSpecs and the checkpointer can serialize them directly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def init_norm(cfg, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p, cfg, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_frequencies(cfg, rot_dim: int) -> jax.Array:
+    exponent = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim
+    return 1.0 / (cfg.rope_theta ** exponent)                 # (rot_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg) -> jax.Array:
+    """Rotate the first ``rotary_pct`` of head dims (ChatGLM 2d-RoPE uses
+    0.5; others 1.0). x: (..., seq, heads, head_dim); positions: (..., seq).
+    """
+    hd = x.shape[-1]
+    rot = int(hd * cfg.rotary_pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    inv = rope_frequencies(cfg, rot)
+    ang = positions[..., None].astype(jnp.float32) * inv      # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., : rot // 2], x_rot[..., rot // 2:]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1.astype(x.dtype), o2.astype(x.dtype), x_pass],
+                           axis=-1)
+
+
+def sinusoidal_positions(max_len: int, d: int) -> jax.Array:
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------- MLP
+def init_mlp(key, cfg, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": _dense_init(k1, (d, ff), dt),
+        "wi_up": _dense_init(k2, (d, ff), dt),
+        "wo": _dense_init(k3, (ff, d), dt),
+    }
+
+
+def mlp_apply(p, cfg, x):
+    act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+    # cast weights to the compute dtype (f32 master params, bf16 MXU), and
+    # pin the activation dtype after `act` (jax.nn.gelu promotes to f32)
+    h = act(x @ p["wi_gate"].astype(x.dtype)).astype(x.dtype) * \
+        (x @ p["wi_up"].astype(x.dtype))
+    return (h @ p["wo"].astype(x.dtype)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- embeddings
+def init_embedding(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"embedding": (jax.random.normal(
+        key, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt)}
+
+
+def embed_apply(p, cfg, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed_apply(p_head, p_embed, cfg, x):
+    """Logits; tied embeddings reuse the embedding matrix."""
+    if cfg.tie_embeddings:
+        w = p_embed["embedding"].T
+    else:
+        w = p_head["w"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def init_lm_head(key, cfg):
+    if cfg.tie_embeddings:
+        return {}
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"w": _dense_init(key, (cfg.d_model, cfg.vocab_size), dt)}

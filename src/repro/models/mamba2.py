@@ -1,0 +1,203 @@
+"""Mamba2 (SSD) block: chunked-parallel train/prefill + recurrent decode.
+
+The state-space duality form: h_t = a_t ⊙ h_{t-1} + dt_t·(B_t ⊗ x_t),
+y_t = C_t·h_t + D·x_t, with a_t = exp(A·dt_t), per-head state (P, N).
+Train/prefill scans over length-``CHUNK`` chunks: intra-chunk quadratic
+attention-like einsums + an inter-chunk state carry, so peak memory is
+O(S·d + chunk²·H) instead of O(S²). Decode carries (conv_state, ssd_state)
+— constant memory, which is what qualifies zamba2 for ``long_500k``.
+The sequential scan (`_ssd_sequential`) is the unit-test oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import _dense_init
+
+CHUNK = 256
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    d_in, h, p_dim, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * d_in + 2 * n + h), dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch))
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log) = -1
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),   # softplus(-2) ≈ 0.13
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _dense_init(ks[3], (d_in, d), dt),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_in, h, _, n = _dims(cfg)
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in: 2 * d_in + 2 * n]
+    dt_raw = proj[..., 2 * d_in + 2 * n:]
+    return z, xbc, dt_raw
+
+
+def _conv_full(p, xbc):
+    """Causal depthwise conv over time. xbc: (B, S, C)."""
+    width = p["conv_w"].shape[0]
+    out = jnp.zeros_like(xbc)
+    for i in range(width):
+        shift = width - 1 - i
+        shifted = jnp.pad(xbc, ((0, 0), (shift, 0), (0, 0)))[:, :xbc.shape[1]]
+        out = out + shifted * p["conv_w"][i].astype(xbc.dtype)
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _conv_step(p, conv_state, xbc_t):
+    """conv_state: (B, width-1, C) past inputs; xbc_t: (B, C)."""
+    width = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state, xbc_t[:, None, :]], axis=1)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32))
+    new_state = window[:, 1:]
+    return jax.nn.silu(out + p["conv_b"].astype(jnp.float32)), new_state
+
+
+def _gate_out(p, cfg, y, z):
+    """RMSNorm(y * silu(z)) @ out_proj."""
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    g = g * lax.rsqrt(ms + cfg.norm_eps) * p["norm_scale"]
+    return (g.astype(z.dtype) @ p["out_proj"].astype(z.dtype))
+
+
+def _ssd_chunked(x, b_in, c_in, log_a, dt, h0):
+    """x:(B,S,H,P)  b_in,c_in:(B,S,N)  log_a,dt:(B,S,H)  h0:(B,H,P,N)."""
+    bsz, s, h, p_dim = x.shape
+    n = b_in.shape[-1]
+    pad = -s % CHUNK
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // CHUNK
+
+    def to_chunks(a):
+        return jnp.moveaxis(
+            a.reshape((bsz, nc, CHUNK) + a.shape[2:]), 1, 0)
+
+    xs = (to_chunks(x), to_chunks(b_in), to_chunks(c_in),
+          to_chunks(log_a), to_chunks(dt))
+
+    def body(h_prev, ch):
+        xc, bc, cc, lac, dtc = ch                    # (B,L,...) one chunk
+        cums = jnp.cumsum(lac, axis=1)               # (B,L,H) inclusive
+        # inter-chunk: y_i += C_i · (decay_to_i · h_prev)
+        y_inter = jnp.einsum("bin,bhpn->bihp", cc, h_prev) * \
+            jnp.exp(cums)[..., None]
+        # intra-chunk quadratic
+        scores = jnp.einsum("bin,bjn->bij", cc, bc)   # (B,L,L)
+        decay = jnp.exp(cums[:, :, None, :] - cums[:, None, :, :])
+        tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool))
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        dtx = xc * dtc[..., None]                     # (B,L,H,P)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", scores, decay, dtx)
+        # state update
+        tot = cums[:, -1]                             # (B,H)
+        decay_end = jnp.exp(tot[:, None] - cums)      # (B,L,H)
+        h_new = h_prev * jnp.exp(tot)[..., None, None] + jnp.einsum(
+            "bjhp,bjn,bjh->bhpn", dtx, bc, decay_end)
+        return h_new, y_inter + y_intra
+
+    h_fin, ys = lax.scan(body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * CHUNK, h, p_dim)
+    return y[:, :s], h_fin
+
+
+def _ssd_sequential(x, b_in, c_in, log_a, dt, h0):
+    """Step-by-step oracle (and the decode recurrence body)."""
+    def step(h, inp):
+        xt, bt, ct, lat, dtt = inp
+        h = h * jnp.exp(lat)[..., None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", xt, bt, dtt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (x, b_in, c_in, log_a, dt))
+    h_fin, ys = lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_fin
+
+
+def init_ssm_state(cfg, batch: int):
+    d_in, h, p_dim, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), jnp.float32),
+        "ssd": jnp.zeros((batch, h, p_dim, n), jnp.float32),
+    }
+
+
+def mamba2_apply(p, cfg, x, *, state: Optional[dict] = None,
+                 decode: bool = False, sequential: bool = False):
+    """x: (B, S, d) -> (y (B, S, d), new_state). decode=True expects S == 1."""
+    bsz, s, _ = x.shape
+    d_in, h, p_dim, n = _dims(cfg)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    log_a = -jnp.exp(p["a_log"])[None, None, :] * dt          # (B,S,H)
+
+    if decode:
+        assert state is not None
+        conv_out, conv_state = _conv_step(p, state["conv"], xbc[:, 0])
+        xs = conv_out[:, :d_in].reshape(bsz, h, p_dim)
+        b_in = conv_out[:, d_in: d_in + n]
+        c_in = conv_out[:, d_in + n:]
+        h_new = state["ssd"] * jnp.exp(log_a[:, 0])[..., None, None] + \
+            jnp.einsum("bhp,bn,bh->bhpn", xs, b_in, dt[:, 0])
+        y = jnp.einsum("bn,bhpn->bhp", c_in, h_new)
+        y = y + xs * p["d_skip"][None, :, None]
+        y = y.reshape(bsz, 1, d_in)
+        out = _gate_out(p, cfg, y, z)
+        return out, {"conv": conv_state, "ssd": h_new}
+
+    conv_out = _conv_full(p, xbc).astype(jnp.float32)
+    xs = conv_out[..., :d_in].reshape(bsz, s, h, p_dim)
+    b_in = conv_out[..., d_in: d_in + n]
+    c_in = conv_out[..., d_in + n:]
+    h0 = jnp.zeros((bsz, h, p_dim, n), jnp.float32) if state is None \
+        else state["ssd"]
+    runner = _ssd_sequential if sequential else _ssd_chunked
+    y, h_fin = runner(xs, b_in, c_in, log_a, dt, h0)
+    y = y + xs * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, d_in)
+    out = _gate_out(p, cfg, y, z)
+
+    new_state = None
+    if state is not None or decode:
+        width = cfg.ssm_conv - 1
+        conv_tail = _conv_tail(xbc, width)
+        new_state = {"conv": conv_tail.astype(jnp.float32), "ssd": h_fin}
+    return out, new_state
+
+
+def _conv_tail(xbc, width: int):
+    s = xbc.shape[1]
+    if s >= width:
+        return xbc[:, s - width:]
+    pad = jnp.zeros((xbc.shape[0], width - s, xbc.shape[2]), xbc.dtype)
+    return jnp.concatenate([pad, xbc], axis=1)

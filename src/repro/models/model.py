@@ -1,0 +1,601 @@
+"""Model assembly for the 10 assigned architectures.
+
+One parameterized decoder stack covering: dense GQA (qwen2, chatglm3,
+mistral-nemo, h2o-danube/SWA), MoE (kimi, mixtral), VLM cross-attention
+superblocks (llama-3.2-vision), encoder-decoder (whisper), hybrid
+Mamba2 + shared attention (zamba2), and xLSTM (mLSTM/sLSTM).
+
+Homogeneous stacks are *scanned* (params carry a leading layer axis, init
+by vmap) so the lowered HLO stays compact for the 512-device dry-run;
+heterogeneous patterns nest scans (VLM superblocks, zamba groups) or
+unroll (xlstm's 12 small layers). Three entry points:
+
+  lm_forward(params, cfg, tokens, frontend=...)   train / no-cache forward
+  lm_prefill(params, cfg, tokens, ...)            fills KV/SSM caches
+  lm_decode_step(params, cfg, token, cache, ...)  one token (serve_step)
+
+Decode==forward consistency is covered per family in tests/test_models.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models import mamba2, moe, xlstm
+from repro.models.layers import (embed_apply, init_embedding, init_lm_head,
+                                 init_mlp, init_norm, mlp_apply, norm_apply,
+                                 unembed_apply)
+from repro.sharding.activations import shard_bsd, shard_logits
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embeddings at arbitrary positions: (..., S) -> (..., S, d)."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) / (10000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ------------------------------------------------------------ block defs
+def init_self_block(key, cfg, *, use_moe: bool = False):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": init_norm(cfg), "attn": attn.init_attention(k1, cfg),
+         "ln2": init_norm(cfg)}
+    if use_moe:
+        p["moe"] = moe.init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg)
+    return p
+
+
+def _ffn_part(p, cfg, x):
+    if "moe" in p:
+        h, aux = moe.moe_apply(p["moe"], cfg, norm_apply(p["ln2"], cfg, x))
+    else:
+        h = mlp_apply(p["mlp"], cfg, norm_apply(p["ln2"], cfg, x))
+        aux = jnp.float32(0.0)
+    return shard_bsd(x + h), aux
+
+
+def self_block_fwd(p, cfg, x, positions, *, causal=True, window=None,
+                   return_kv=False):
+    h = norm_apply(p["ln1"], cfg, x)
+    q, k, v = attn.qkv_project(p["attn"], cfg, h, q_positions=positions,
+                               kv_positions=positions)
+    o = attn.attention_core(q, k, v, q_pos=positions, kv_pos=positions,
+                            causal=causal,
+                            window=cfg.window if window is None else window,
+                            contiguous_kv=True)
+    x = shard_bsd(x + attn.out_project(p["attn"], o))
+    x, aux = _ffn_part(p, cfg, x)
+    if return_kv:
+        return x, aux, (k, v)
+    return x, aux
+
+
+def self_block_decode(p, cfg, x, cache, t):
+    """x: (B,1,d); cache: {'k','v'}; t: (B,) current position."""
+    h = norm_apply(p["ln1"], cfg, x)
+    pos = t.reshape(-1, 1)
+    q, k_new, v_new = attn.qkv_project(p["attn"], cfg, h, q_positions=pos,
+                                       kv_positions=pos)
+    cache = attn.cache_write_decode(cache, k_new, v_new, t)
+    width = cache["k"].shape[1]
+    kv_pos, kv_valid = attn.cache_positions(t, width, x.shape[0])
+    o = attn.attention_core(q, cache["k"], cache["v"], q_pos=pos,
+                            kv_pos=kv_pos, kv_valid=kv_valid, causal=True,
+                            window=cfg.window)
+    x = x + attn.out_project(p["attn"], o)
+    x, _ = _ffn_part(p, cfg, x)
+    return x, cache
+
+
+def init_cross_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_norm(cfg),
+            "attn": attn.init_attention(k1, cfg, cross=True),
+            "ln2": init_norm(cfg), "mlp": init_mlp(k2, cfg)}
+
+
+def cross_block_kv(p, cfg, kv_src):
+    """Precompute cross-attention k/v from encoder/frontend states."""
+    _, k, v = attn.qkv_project(p["attn"], cfg, kv_src, kv_x=kv_src,
+                               rope=False)
+    return {"k": k, "v": v}
+
+
+def cross_block_core(p, cfg, x, ck, cv):
+    b, skv = ck.shape[0], ck.shape[1]
+    h = norm_apply(p["ln1"], cfg, x)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"].astype(h.dtype))
+    o = attn.attention_core(q, ck, cv,
+                            q_pos=jnp.zeros((b, x.shape[1]), jnp.int32),
+                            kv_pos=jnp.zeros((b, skv), jnp.int32),
+                            causal=False, window=0, contiguous_kv=True)
+    x = x + attn.out_project(p["attn"], o)
+    return _ffn_part(p, cfg, x)
+
+
+def cross_block_fwd(p, cfg, x, kv_src):
+    kv = cross_block_kv(p, cfg, kv_src)
+    return cross_block_core(p, cfg, x, kv["k"], kv["v"])
+
+
+def init_mamba_layer(key, cfg):
+    return {"ln": init_norm(cfg), "m": mamba2.init_mamba2(key, cfg)}
+
+
+# ---------------------------------------------------------- scan helpers
+def _vmap_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, max(n, 1)))
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "full":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def _scan_aux(stacked, x, body, remat_mode: str, extra=None):
+    """carry=(x, aux); body(x, inp) -> (x, aux_increment)."""
+    fn = _remat(body, remat_mode)
+
+    def scan_fn(carry, inp):
+        x, aux = carry
+        x, a = fn(x, inp)
+        return (x, aux + a), None
+
+    xs = stacked if extra is None else (stacked, extra)
+    (x, aux), _ = lax.scan(scan_fn, (x, jnp.float32(0.0)), xs)
+    return x, aux
+
+
+def _scan_collect(stacked, x, body, extra=None):
+    """carry=x; body(x, inp) -> (x, ys); used by prefill/decode."""
+    def scan_fn(x, inp):
+        return body(x, inp)
+
+    xs = stacked if extra is None else (stacked, extra)
+    return lax.scan(scan_fn, x, xs)
+
+
+# ---------------------------------------------------------------- init
+def init_lm(key, cfg) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg),
+        "final_norm": init_norm(cfg),
+        "head": init_lm_head(keys[1], cfg),
+    }
+    fam = cfg.family
+    if fam == "dense":
+        params["blocks"] = _vmap_init(
+            lambda k: init_self_block(k, cfg), keys[2], cfg.n_layers)
+    elif fam == "moe":
+        nd = cfg.first_k_dense
+        if nd:
+            params["dense_blocks"] = _vmap_init(
+                lambda k: init_self_block(k, cfg), keys[3], nd)
+        params["blocks"] = _vmap_init(
+            lambda k: init_self_block(k, cfg, use_moe=True), keys[2],
+            cfg.n_layers - nd)
+    elif fam == "vlm":
+        per = cfg.cross_attn_every - 1
+        n_super = cfg.n_layers // cfg.cross_attn_every
+        params["blocks"] = _vmap_init(
+            lambda k: jax.vmap(lambda kk: init_self_block(kk, cfg))(
+                jax.random.split(k, per)), keys[2], n_super)
+        params["cross_blocks"] = _vmap_init(
+            lambda k: init_cross_block(k, cfg), keys[3], n_super)
+    elif fam == "audio":
+        params["enc_blocks"] = _vmap_init(
+            lambda k: init_self_block(k, cfg), keys[2], cfg.encoder_layers)
+        params["enc_norm"] = init_norm(cfg)
+        params["blocks"] = _vmap_init(
+            lambda k: {**init_self_block(k, cfg),
+                       "cross": init_cross_block(
+                           jax.random.fold_in(k, 7), cfg)},
+            keys[3], cfg.n_layers)
+    elif fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every
+        params["blocks"] = _vmap_init(
+            lambda k: jax.vmap(lambda kk: init_mamba_layer(kk, cfg))(
+                jax.random.split(k, per)), keys[2], n_groups)
+        params["shared_blocks"] = _vmap_init(
+            lambda k: init_self_block(k, cfg), keys[3], cfg.n_shared_blocks)
+    elif fam == "ssm":
+        blocks = []
+        for i in range(cfg.n_layers):
+            kk = jax.random.fold_in(keys[2], i)
+            if i in cfg.slstm_at:
+                blocks.append({"ln": init_norm(cfg),
+                               "slstm": xlstm.init_slstm(kk, cfg)})
+            else:
+                blocks.append({"ln": init_norm(cfg),
+                               "mlstm": xlstm.init_mlstm(kk, cfg)})
+        params["blocks"] = blocks
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# -------------------------------------------------------------- forward
+def _embed_tokens(params, cfg, tokens, positions):
+    x = embed_apply(params["embed"], cfg, tokens)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.pos == "abs":
+        x = x + _sinusoid(positions, cfg.d_model).astype(x.dtype)
+    return shard_bsd(x)
+
+
+def encoder_forward(params, cfg, frames):
+    """Whisper encoder over stub-frontend frame embeddings (B, T, d)."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    t = frames.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None],
+                           frames.shape[:2])
+    x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)
+
+    def body(x, p_l):
+        return self_block_fwd(p_l, cfg, x, pos, causal=False, window=0)
+
+    x, _ = _scan_aux(params["enc_blocks"], x, body, cfg.remat)
+    return norm_apply(params["enc_norm"], cfg, x)
+
+
+def lm_forward(params, cfg, tokens, *, frontend: Optional[jax.Array] = None,
+               remat: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits (B,S,V) f32, aux loss)."""
+    remat = cfg.remat if remat is None else remat
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    x = _embed_tokens(params, cfg, tokens, positions)
+    fam = cfg.family
+    aux = jnp.float32(0.0)
+
+    if fam in ("dense", "moe"):
+        if fam == "moe" and cfg.first_k_dense:
+            x, a = _scan_aux(params["dense_blocks"], x,
+                             lambda x, p: self_block_fwd(p, cfg, x,
+                                                         positions), remat)
+            aux = aux + a
+        x, a = _scan_aux(params["blocks"], x,
+                         lambda x, p: self_block_fwd(p, cfg, x, positions),
+                         remat)
+        aux = aux + a
+
+    elif fam == "vlm":
+        assert frontend is not None, "vlm needs stub patch embeddings"
+        kv_src = frontend.astype(x.dtype)
+        per = cfg.cross_attn_every - 1
+
+        def body(x, inp):
+            self_p, cross_p = inp
+            a_sum = jnp.float32(0.0)
+            for i in range(per):
+                p_i = jax.tree.map(lambda t: t[i], self_p)
+                x, a = self_block_fwd(p_i, cfg, x, positions)
+                a_sum = a_sum + a
+            x, a = cross_block_fwd(cross_p, cfg, x, kv_src)
+            return x, a_sum + a
+
+        x, aux = _scan_aux((params["blocks"], params["cross_blocks"]), x,
+                           body, remat)
+
+    elif fam == "audio":
+        assert frontend is not None, "audio needs stub frame embeddings"
+        enc = encoder_forward(params, cfg, frontend)
+
+        def body(x, p_l):
+            x, a = self_block_fwd(
+                {k: p_l[k] for k in ("ln1", "attn", "ln2", "mlp")},
+                cfg, x, positions)
+            x, a2 = cross_block_fwd(p_l["cross"], cfg, x, enc)
+            return x, a + a2
+
+        x, aux = _scan_aux(params["blocks"], x, body, remat)
+
+    elif fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every
+        gids = jnp.arange(n_groups, dtype=jnp.int32)
+
+        def body(x, inp):
+            group_p, g = inp
+            for i in range(per):
+                p_i = jax.tree.map(lambda t: t[i], group_p)
+                h, _ = mamba2.mamba2_apply(
+                    p_i["m"], cfg, norm_apply(p_i["ln"], cfg, x))
+                x = shard_bsd(x + h)
+            sh = jax.tree.map(lambda t: t[g % cfg.n_shared_blocks],
+                              params["shared_blocks"])
+            return self_block_fwd(sh, cfg, x, positions)
+
+        x, aux = _scan_aux(params["blocks"], x, body, remat, extra=gids)
+
+    elif fam == "ssm":
+        for p_l in params["blocks"]:
+            h = norm_apply(p_l["ln"], cfg, x)
+            if "slstm" in p_l:
+                y, _ = xlstm.slstm_apply(p_l["slstm"], cfg, h)
+            else:
+                y, _ = xlstm.mlstm_apply(p_l["mlstm"], cfg, h)
+            x = shard_bsd(x + y)
+
+    x = norm_apply(params["final_norm"], cfg, x)
+    logits = shard_logits(
+        unembed_apply(params.get("head", {}), params["embed"], cfg, x))
+    return logits, aux
+
+
+# ----------------------------------------------------------- prefill
+def lm_prefill(params, cfg, tokens, *, frontend: Optional[jax.Array] = None,
+               max_len: int) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Forward pass that fills caches. Returns (last-token logits, cache)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    x = _embed_tokens(params, cfg, tokens, positions)
+    fam = cfg.family
+    cache: Dict[str, Any] = {"t": jnp.full((b,), s, jnp.int32)}
+
+    def kv_entry(k, v):
+        return attn.cache_write_prefill(
+            attn.init_kv_cache(cfg, b, max_len), k, v)
+
+    def self_body(x, p_l):
+        x, _, (k, v) = self_block_fwd(p_l, cfg, x, positions, return_kv=True)
+        return x, kv_entry(k, v)
+
+    if fam in ("dense", "moe"):
+        if fam == "moe" and cfg.first_k_dense:
+            x, dc = _scan_collect(params["dense_blocks"], x, self_body)
+            cache["dense_layers"] = dc
+        x, lc = _scan_collect(params["blocks"], x, self_body)
+        cache["layers"] = lc
+
+    elif fam == "vlm":
+        kv_src = frontend.astype(x.dtype)
+        per = cfg.cross_attn_every - 1
+
+        def body(x, inp):
+            self_p, cross_p = inp
+            entries = []
+            for i in range(per):
+                p_i = jax.tree.map(lambda t: t[i], self_p)
+                x, _, (k, v) = self_block_fwd(p_i, cfg, x, positions,
+                                              return_kv=True)
+                entries.append(kv_entry(k, v))
+            stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *entries)
+            ckv = cross_block_kv(cross_p, cfg, kv_src)
+            x, _ = cross_block_core(cross_p, cfg, x, ckv["k"], ckv["v"])
+            return x, (stacked, ckv)
+
+        x, (lc, cc) = _scan_collect(
+            (params["blocks"], params["cross_blocks"]), x, body)
+        cache["layers"], cache["cross"] = lc, cc
+
+    elif fam == "audio":
+        enc = encoder_forward(params, cfg, frontend)
+
+        def body(x, p_l):
+            x, _, (k, v) = self_block_fwd(
+                {k2: p_l[k2] for k2 in ("ln1", "attn", "ln2", "mlp")},
+                cfg, x, positions, return_kv=True)
+            ckv = cross_block_kv(p_l["cross"], cfg, enc)
+            x, _ = cross_block_core(p_l["cross"], cfg, x, ckv["k"], ckv["v"])
+            return x, (kv_entry(k, v), ckv)
+
+        x, (lc, cc) = _scan_collect(params["blocks"], x, body)
+        cache["layers"], cache["cross"] = lc, cc
+
+    elif fam == "hybrid":
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // cfg.attn_every
+        gids = jnp.arange(n_groups, dtype=jnp.int32)
+
+        def body(x, inp):
+            group_p, g = inp
+            states = []
+            for i in range(per):
+                p_i = jax.tree.map(lambda t: t[i], group_p)
+                h, st = mamba2.mamba2_apply(
+                    p_i["m"], cfg, norm_apply(p_i["ln"], cfg, x),
+                    state=mamba2.init_ssm_state(cfg, b))
+                x = x + h
+                states.append(st)
+            sh = jax.tree.map(lambda t: t[g % cfg.n_shared_blocks],
+                              params["shared_blocks"])
+            x, _, (k, v) = self_block_fwd(sh, cfg, x, positions,
+                                          return_kv=True)
+            return x, (jax.tree.map(lambda *ts: jnp.stack(ts), *states),
+                       kv_entry(k, v))
+
+        x, (sc, lc) = _scan_collect(params["blocks"], x, body, extra=gids)
+        cache["ssm"], cache["layers"] = sc, lc
+
+    elif fam == "ssm":
+        states = []
+        for i, p_l in enumerate(params["blocks"]):
+            h = norm_apply(p_l["ln"], cfg, x)
+            if "slstm" in p_l:
+                y, st = xlstm.slstm_apply(
+                    p_l["slstm"], cfg, h, state=xlstm.init_slstm_state(cfg, b))
+            else:
+                y, st = xlstm.mlstm_apply(
+                    p_l["mlstm"], cfg, h, state=xlstm.init_mlstm_state(cfg, b))
+            x = x + y
+            states.append(st)
+        cache["xlstm"] = states
+
+    x_last = norm_apply(params["final_norm"], cfg, x[:, -1:])
+    logits = unembed_apply(params.get("head", {}), params["embed"], cfg,
+                           x_last)
+    return logits, cache
+
+
+# -------------------------------------------------------------- decode
+def lm_decode_step(params, cfg, token, cache
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One serve step: token (B, 1) -> (logits (B, 1, V), updated cache)."""
+    b = token.shape[0]
+    t = cache["t"]
+    pos = t.reshape(-1, 1)
+    x = _embed_tokens(params, cfg, token, pos)
+    fam = cfg.family
+    new_cache: Dict[str, Any] = {"t": t + 1}
+
+    def self_decode_body(x, inp):
+        p_l, c_l = inp
+        return self_block_decode(p_l, cfg, x, c_l, t)
+
+    if fam in ("dense", "moe"):
+        if fam == "moe" and cfg.first_k_dense:
+            x, dc = _scan_collect(
+                (params["dense_blocks"], cache["dense_layers"]), x,
+                self_decode_body)
+            new_cache["dense_layers"] = dc
+        x, lc = _scan_collect((params["blocks"], cache["layers"]), x,
+                              self_decode_body)
+        new_cache["layers"] = lc
+
+    elif fam == "vlm":
+        per = cfg.cross_attn_every - 1
+
+        def body(x, inp):
+            self_p, cross_p, c_self, c_cross = inp
+            new_entries = []
+            for i in range(per):
+                p_i = jax.tree.map(lambda a: a[i], self_p)
+                c_i = jax.tree.map(lambda a: a[i], c_self)
+                x, c_new = self_block_decode(p_i, cfg, x, c_i, t)
+                new_entries.append(c_new)
+            x, _ = cross_block_core(cross_p, cfg, x, c_cross["k"],
+                                    c_cross["v"])
+            return x, (jax.tree.map(lambda *ts: jnp.stack(ts), *new_entries),
+                       c_cross)
+
+        x, (lc, cc) = _scan_collect(
+            (params["blocks"], params["cross_blocks"], cache["layers"],
+             cache["cross"]), x, body)
+        new_cache["layers"], new_cache["cross"] = lc, cc
+
+    elif fam == "audio":
+        def body(x, inp):
+            p_l, c_l, c_cross = inp
+            x, c_new = self_block_decode(
+                {k2: p_l[k2] for k2 in ("ln1", "attn", "ln2", "mlp")},
+                cfg, x, c_l, t)
+            x, _ = cross_block_core(p_l["cross"], cfg, x, c_cross["k"],
+                                    c_cross["v"])
+            return x, (c_new, c_cross)
+
+        x, (lc, cc) = _scan_collect(
+            (params["blocks"], cache["layers"], cache["cross"]), x, body)
+        new_cache["layers"], new_cache["cross"] = lc, cc
+
+    elif fam == "hybrid":
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // cfg.attn_every
+        gids = jnp.arange(n_groups, dtype=jnp.int32)
+
+        def body(x, inp):
+            group_p, g, c_ssm, c_attn = inp
+            new_states = []
+            for i in range(per):
+                p_i = jax.tree.map(lambda a: a[i], group_p)
+                s_i = jax.tree.map(lambda a: a[i], c_ssm)
+                h, st = mamba2.mamba2_apply(
+                    p_i["m"], cfg, norm_apply(p_i["ln"], cfg, x),
+                    state=s_i, decode=True)
+                x = x + h
+                new_states.append(st)
+            sh = jax.tree.map(lambda a: a[g % cfg.n_shared_blocks],
+                              params["shared_blocks"])
+            x, c_new = self_block_decode(sh, cfg, x, c_attn, t)
+            return x, (jax.tree.map(lambda *ts: jnp.stack(ts), *new_states),
+                       c_new)
+
+        x, (sc, lc) = _scan_collect(
+            (params["blocks"], gids, cache["ssm"], cache["layers"]), x, body)
+        new_cache["ssm"], new_cache["layers"] = sc, lc
+
+    elif fam == "ssm":
+        new_states = []
+        for i, p_l in enumerate(params["blocks"]):
+            h = norm_apply(p_l["ln"], cfg, x)
+            st = cache["xlstm"][i]
+            if "slstm" in p_l:
+                y, st_new = xlstm.slstm_apply(p_l["slstm"], cfg, h, state=st,
+                                              decode=True)
+            else:
+                y, st_new = xlstm.mlstm_apply(p_l["mlstm"], cfg, h, state=st,
+                                              decode=True)
+            x = x + y
+            new_states.append(st_new)
+        new_cache["xlstm"] = new_states
+
+    x = norm_apply(params["final_norm"], cfg, x)
+    logits = unembed_apply(params.get("head", {}), params["embed"], cfg, x)
+    return logits, new_cache
+
+
+# -------------------------------------------------------- cache constructor
+def init_cache(cfg, batch: int, max_len: int) -> Dict[str, Any]:
+    """Build an (empty) cache with exactly the structure lm_prefill returns.
+
+    Used by the decode dry-run: ``jax.eval_shape(init_cache, ...)`` gives
+    the ShapeDtypeStructs of every cache leaf without allocating anything.
+    """
+    fam = cfg.family
+    dt = jnp.dtype(cfg.compute_dtype)
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    width = min(max_len, cfg.window) if cfg.window else max_len
+    cache: Dict[str, Any] = {"t": jnp.zeros((batch,), jnp.int32)}
+
+    def kv_stack(*lead):
+        shp = tuple(lead) + (batch, width, kv, hd)
+        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+
+    def cross_stack(*lead):
+        shp = tuple(lead) + (batch, cfg.n_frontend_tokens, kv, hd)
+        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+
+    if fam in ("dense", "moe"):
+        nd = cfg.first_k_dense if fam == "moe" else 0
+        if nd:
+            cache["dense_layers"] = kv_stack(nd)
+        cache["layers"] = kv_stack(cfg.n_layers - nd)
+    elif fam == "vlm":
+        n_super = cfg.n_layers // cfg.cross_attn_every
+        per = cfg.cross_attn_every - 1
+        cache["layers"] = kv_stack(n_super, per)
+        cache["cross"] = cross_stack(n_super)
+    elif fam == "audio":
+        cache["layers"] = kv_stack(cfg.n_layers)
+        cache["cross"] = cross_stack(cfg.n_layers)
+    elif fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every
+        st = mamba2.init_ssm_state(cfg, batch)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.zeros((n_groups, per) + a.shape, a.dtype), st)
+        cache["layers"] = kv_stack(n_groups)
+    elif fam == "ssm":
+        states = []
+        for i in range(cfg.n_layers):
+            if i in cfg.slstm_at:
+                states.append(xlstm.init_slstm_state(cfg, batch))
+            else:
+                states.append(xlstm.init_mlstm_state(cfg, batch))
+        cache["xlstm"] = states
+    return cache

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-grouped dispatch.
+
+Dispatch is sort-based (megablocks-style, no (T, E, C) one-hot): flatten
+the (T, k) assignments, stable-sort by expert, compute each slot's rank
+within its expert group, and scatter into an (E, C, d) buffer. Expert FFNs
+run as one grouped einsum so the MXU sees dense (C, d) x (d, ff) panels.
+Tokens over a group's capacity are dropped (contribution zero) — capacity
+factor is a config knob; the aux load-balancing loss keeps groups even.
+
+Sharding (see repro.sharding): expert dim over 'data' when divisible
+(expert parallelism — kimi's 384 experts), else FSDP over d_model
+(mixtral's 8 experts); ff dim over 'model' in both cases.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init
+from repro.sharding.activations import shard_moe_grouped
+
+
+def init_moe(key, cfg):
+    d, ff, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, e), jnp.float32),
+        "wi_gate": _dense_init(ks[1], (e, d, ff), dt),
+        "wi_up": _dense_init(ks[2], (e, d, ff), dt),
+        "wo": _dense_init(ks[3], (e, ff, d), dt),
+    }
+    if cfg.n_shared_experts:
+        sff = ff * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi_gate": _dense_init(k1, (d, sff), dt),
+            "wi_up": _dense_init(k2, (d, sff), dt),
+            "wo": _dense_init(k3, (sff, d), dt),
+        }
+    return p
+
+
+def moe_apply(p, cfg, x, *, capacity_factor: Optional[float] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux load-balancing loss).
+
+    With an activation mesh installed (dry-run / production) dispatch goes
+    through the explicit shard_map EP path (moe_sharded.py); the pjit
+    gather path below is the single-device / test implementation."""
+    capacity_factor = (cfg.moe_capacity_factor if capacity_factor is None
+                       else capacity_factor)
+    from repro.sharding.activations import current_mesh
+    if current_mesh()[0] is not None:
+        from repro.models.moe_sharded import moe_apply_sharded
+        return moe_apply_sharded(p, cfg, x, capacity_factor=capacity_factor)
+    return _moe_apply_dense(p, cfg, x, capacity_factor)
+
+
+def _moe_apply_dense(p, cfg, x, capacity_factor: float
+                     ) -> Tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    t = b * s
+    xf = x.reshape(t, d)
+    act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                    # (T, k)
+    gates = gates / jnp.maximum(
+        jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # --- aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    disp = jnp.zeros((t, e), jnp.float32).at[
+        jnp.arange(t)[:, None], eidx].set(1.0)
+    fe = jnp.mean(disp, axis=0)
+    aux = e * jnp.sum(fe * me)
+
+    # --- sort-based capacity-grouped dispatch
+    cap = max(int(capacity_factor * t * k / e), 1)
+    eflat = eidx.reshape(-1)                                 # (T*k,)
+    order = jnp.argsort(eflat, stable=True)
+    es = eflat[order]
+    starts = jnp.searchsorted(es, jnp.arange(e, dtype=es.dtype))
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[es].astype(jnp.int32)
+    keep = rank < cap
+    dest = jnp.where(keep, es.astype(jnp.int32) * cap + rank, e * cap)
+
+    src_tok = (order // k).astype(jnp.int32)
+    grouped = jnp.zeros((e * cap, d), x.dtype).at[dest].set(
+        xf[src_tok], mode="drop").reshape(e, cap, d)
+    grouped = shard_moe_grouped(grouped)   # EP anchor (see repro.sharding)
+
+    h = act(jnp.einsum("ecd,edf->ecf", grouped,
+                       p["wi_gate"].astype(x.dtype))).astype(x.dtype)
+    h = h * jnp.einsum("ecd,edf->ecf", grouped, p["wi_up"].astype(x.dtype))
+    yg = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
+    yg = shard_moe_grouped(yg).reshape(e * cap, d)
+
+    # --- combine: gather each flat slot's expert output, weight by gate
+    dest_by_flat = jnp.full((t * k,), e * cap, jnp.int32).at[order].set(dest)
+    contrib = jnp.concatenate(
+        [yg, jnp.zeros((1, d), yg.dtype)], axis=0)[dest_by_flat]
+    out = jnp.sum(contrib.reshape(t, k, d) *
+                  gates.astype(x.dtype)[..., None], axis=1)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        hs = act(xf @ sp["wi_gate"].astype(x.dtype)).astype(x.dtype) * (
+            xf @ sp["wi_up"].astype(x.dtype))
+        out = out + hs @ sp["wo"].astype(x.dtype)
+
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,280 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly sequential recurrence).
+
+mLSTM runs in three numerically-identical modes (tested against each
+other): ``sequential`` (the oracle recurrence), ``chunked`` (train/prefill:
+intra-chunk quadratic + inter-chunk (C, n, m) carry with log-space
+stabilizers — the TPU-friendly form), and single-step ``decode``.
+sLSTM has hidden-state feedback into its gates, so it cannot be
+parallelized over time; train/prefill use lax.scan (DESIGN.md notes a
+Pallas sequential-scan kernel as the TPU production path) and decode is
+one step. Constant-size state ⇒ xlstm-125m qualifies for ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import _dense_init
+
+CHUNK = 256
+_EXPAND = 2          # mLSTM pre-up-projection factor
+_FFN_FACTOR = 4.0 / 3.0
+
+
+def _mdims(cfg):
+    d_in = _EXPAND * cfg.d_model
+    return d_in, cfg.n_heads, d_in // cfg.n_heads
+
+
+# =============================================================== mLSTM
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    d_in, h, hd = _mdims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": _dense_init(ks[0], (d, 2 * d_in), dt),
+        "conv_w": (jax.random.normal(ks[1], (4, d_in)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "wq": _dense_init(ks[2], (d_in, d_in), dt),
+        "wk": _dense_init(ks[3], (d_in, d_in), dt),
+        "wv": _dense_init(ks[4], (d_in, d_in), dt),
+        "w_i": _dense_init(ks[5], (d_in, h), jnp.float32, scale=0.01),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "w_f": _dense_init(ks[6], (d_in, h), jnp.float32, scale=0.01),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # open forget gates at init
+        "gn_scale": jnp.ones((d_in,), jnp.float32),
+        "down": _dense_init(ks[7], (d_in, d), dt),
+    }
+
+
+def init_mlstm_state(cfg, batch: int):
+    d_in, h, hd = _mdims(cfg)
+    return {
+        "conv": jnp.zeros((batch, 3, d_in), jnp.float32),
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def _conv4(p, x):
+    out = jnp.zeros_like(x)
+    for i in range(4):
+        shift = 3 - i
+        shifted = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + shifted * p["conv_w"][i].astype(x.dtype)
+    return jax.nn.silu(out + p["conv_b"].astype(x.dtype))
+
+
+def _mlstm_qkvif(p, cfg, x_m, conv_x):
+    b, s, _ = x_m.shape
+    _, h, hd = _mdims(cfg)
+    q = (conv_x @ p["wq"].astype(x_m.dtype)).reshape(b, s, h, hd)
+    k = (conv_x @ p["wk"].astype(x_m.dtype)).reshape(b, s, h, hd)
+    v = (x_m @ p["wv"].astype(x_m.dtype)).reshape(b, s, h, hd)
+    xf = x_m.astype(jnp.float32)
+    log_i = xf @ p["w_i"] + p["b_i"]                       # (B,S,H)
+    log_f = jax.nn.log_sigmoid(xf @ p["w_f"] + p["b_f"])   # (B,S,H)
+    k = k * (hd ** -0.5)
+    return (q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), log_i, log_f)
+
+
+def _mlstm_sequential(q, k, v, log_i, log_f, state):
+    """Oracle recurrence. q/k/v: (B,S,H,hd)."""
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, lit, lft = inp
+        m_new = jnp.maximum(lft + m, lit)
+        fp = jnp.exp(lft + m - m_new)[..., None, None]
+        ip = jnp.exp(lit - m_new)[..., None, None]
+        c = fp * c + ip * (vt[..., :, None] * kt[..., None, :])  # (B,H,hd,hd)
+        n = fp[..., 0] * n + ip[..., 0] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", c, qt)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (c, n, m_new), num / den
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, log_i, log_f))
+    (c, n, m), ys = lax.scan(step, (state["c"], state["n"], state["m"]), xs)
+    return jnp.moveaxis(ys, 0, 1), {"c": c, "n": n, "m": m}
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, state):
+    """Chunkwise-parallel mLSTM with carried (C, n, m)."""
+    b, s, h, hd = q.shape
+    pad = -s % CHUNK
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        log_i = zf(log_i)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))  # pad f=log(1)=0? no:
+        # padded steps must not pollute the state: set their input gate to -inf
+        log_i = log_i.at[:, s:].set(-1e30) if pad else log_i
+    nc = q.shape[1] // CHUNK
+    chunkify = lambda a: jnp.moveaxis(
+        a.reshape((b, nc, CHUNK) + a.shape[2:]), 1, 0)
+    xs = tuple(chunkify(a) for a in (q, k, v, log_i, log_f))
+
+    def body(carry, ch):
+        c_prev, n_prev, m_prev = carry
+        qc, kc, vc, lic, lfc = ch                  # (B,L,...)
+        bcum = jnp.cumsum(lfc, axis=1)             # (B,L,H) inclusive
+        # log weights: intra a_ij = b_i - b_j + log i_j (j<=i); inter g_i
+        a = bcum[:, :, None, :] - bcum[:, None, :, :] + lic[:, None, :, :]
+        tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool))
+        a = jnp.where(tri[None, :, :, None], a, -1e30)   # (B,i,j,H)
+        g = bcum + m_prev[:, None, :]                     # (B,L,H)
+        m_row = jnp.maximum(jnp.max(a, axis=2), g)        # (B,L,H)
+        w_intra = jnp.exp(a - m_row[:, :, None, :])       # (B,i,j,H)
+        w_inter = jnp.exp(g - m_row)                      # (B,L,H)
+
+        scores = jnp.einsum("bihk,bjhk->bijh", qc, kc) * w_intra
+        num = jnp.einsum("bijh,bjhv->bihv", scores, vc) + \
+            w_inter[..., None] * jnp.einsum("bhvk,bihk->bihv", c_prev, qc)
+        den = jnp.sum(scores, axis=2) + \
+            w_inter * jnp.einsum("bhk,bihk->bih", n_prev, qc)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_row))
+        y = num / den[..., None]
+
+        # state update to chunk end
+        b_l = bcum[:, -1]                                  # (B,H)
+        m_new = jnp.maximum(b_l + m_prev,
+                            jnp.max(b_l[:, None] - bcum + lic, axis=1))
+        wj = jnp.exp(b_l[:, None] - bcum + lic - m_new[:, None])  # (B,L,H)
+        c_new = jnp.exp(b_l + m_prev - m_new)[..., None, None] * c_prev + \
+            jnp.einsum("bjh,bjhv,bjhk->bhvk", wj, vc, kc)
+        n_new = jnp.exp(b_l + m_prev - m_new)[..., None] * n_prev + \
+            jnp.einsum("bjh,bjhk->bhk", wj, kc)
+        return (c_new, n_new, m_new), y
+
+    (c, n, m), ys = lax.scan(body, (state["c"], state["n"], state["m"]), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * CHUNK, h, hd)
+    return y[:, :s], {"c": c, "n": n, "m": m}
+
+
+def _groupnorm(x, scale, h, eps):
+    """Per-head groupnorm over the head dim. x: (B,S,d_in)."""
+    b, s, d_in = x.shape
+    xg = x.reshape(b, s, h, d_in // h).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    y = (xg - mu) * lax.rsqrt(var + eps)
+    return y.reshape(b, s, d_in) * scale
+
+
+def mlstm_apply(p, cfg, x, *, state: Optional[dict] = None,
+                decode: bool = False, sequential: bool = False):
+    """x: (B, S, d) -> (y, new_state)."""
+    b, s, _ = x.shape
+    d_in, h, hd = _mdims(cfg)
+    up = x @ p["up"].astype(x.dtype)
+    x_m, z = up[..., :d_in], up[..., d_in:]
+
+    if decode:
+        assert state is not None and s == 1
+        window = jnp.concatenate(
+            [state["conv"], x_m.astype(jnp.float32)], axis=1)   # (B,4,d_in)
+        conv_x = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(jnp.float32))
+            + p["conv_b"].astype(jnp.float32))[:, None, :]
+        q, k, v, li, lf = _mlstm_qkvif(p, cfg, x_m, conv_x.astype(x.dtype))
+        y, st = _mlstm_sequential(q, k, v, li, lf,
+                                  {k2: state[k2] for k2 in ("c", "n", "m")})
+        new_state = dict(st, conv=window[:, 1:])
+    else:
+        conv_x = _conv4(p, x_m)
+        q, k, v, li, lf = _mlstm_qkvif(p, cfg, x_m, conv_x)
+        cell_state = ({k2: state[k2] for k2 in ("c", "n", "m")}
+                      if state is not None else
+                      {kk: vv for kk, vv in init_mlstm_state(cfg, b).items()
+                       if kk != "conv"})
+        runner = _mlstm_sequential if sequential else _mlstm_chunked
+        y, st = runner(q, k, v, li, lf, cell_state)
+        new_state = None
+        if state is not None:
+            tail = x_m.astype(jnp.float32)
+            tail = jnp.pad(tail, ((0, 0), (max(0, 3 - s), 0), (0, 0)))
+            new_state = dict(st, conv=tail[:, -3:])
+
+    y = _groupnorm(y.reshape(b, s, d_in), p["gn_scale"], h, cfg.norm_eps)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["down"].astype(x.dtype), new_state
+
+
+# =============================================================== sLSTM
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    f = int(_FFN_FACTOR * d)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "w": _dense_init(ks[0], (d, 4, h, hd), jnp.float32),
+        "r": (_dense_init(ks[1], (h, hd, 4, hd), jnp.float32, scale=0.02)),
+        "b": jnp.concatenate([
+            jnp.zeros((2, h, hd)),                 # z, i
+            jnp.full((1, h, hd), 3.0),             # f (open at init)
+            jnp.zeros((1, h, hd))], axis=0).astype(jnp.float32),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "ffn_gate": _dense_init(ks[3], (d, f), dt),
+        "ffn_up": _dense_init(ks[4], (d, f), dt),
+        "ffn_down": _dense_init(ks[5], (f, d), dt),
+    }
+
+
+def init_slstm_state(cfg, batch: int):
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": jnp.full_like(z, -1e30)}
+
+
+def slstm_apply(p, cfg, x, *, state: Optional[dict] = None,
+                decode: bool = False):
+    """x: (B, S, d) -> (y, new_state). Sequential over time by nature."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, d // cfg.n_heads
+    wx = jnp.einsum("bsd,dghk->bsghk", x.astype(jnp.float32), p["w"])
+
+    st = state if state is not None else init_slstm_state(cfg, b)
+
+    def step(carry, wx_t):
+        h_prev, c, n, m = carry
+        rec = jnp.einsum("bhk,hkgv->bghv", h_prev, p["r"])
+        pre = wx_t + rec + p["b"][None]
+        z_t = jnp.tanh(pre[:, 0])
+        log_i = pre[:, 1]
+        log_f = jax.nn.log_sigmoid(pre[:, 2])
+        o = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(log_f + m, log_i)
+        fp = jnp.exp(log_f + m - m_new)
+        ip = jnp.exp(log_i - m_new)
+        c = fp * c + ip * z_t
+        n = fp * n + ip
+        h_new = o * c / jnp.maximum(n, 1e-6)
+        return (h_new, c, n, m_new), h_new
+
+    xs = jnp.moveaxis(wx, 1, 0)
+    (h_f, c_f, n_f, m_f), ys = lax.scan(
+        step, (st["h"], st["c"], st["n"], st["m"]), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d)
+
+    mu = jnp.mean(y.reshape(b, s, h, hd), -1, keepdims=True)
+    var = jnp.var(y.reshape(b, s, h, hd), -1, keepdims=True)
+    y = ((y.reshape(b, s, h, hd) - mu) * lax.rsqrt(var + cfg.norm_eps)
+         ).reshape(b, s, d) * p["gn_scale"]
+    y = y.astype(x.dtype)
+
+    act = jax.nn.gelu
+    ff = act(y @ p["ffn_gate"].astype(x.dtype)).astype(x.dtype) * (
+        y @ p["ffn_up"].astype(x.dtype))
+    out = (ff @ p["ffn_down"].astype(x.dtype)).astype(x.dtype)
+    new_state = {"h": h_f, "c": c_f, "n": n_f, "m": m_f} \
+        if (state is not None or decode) else None
+    return out, new_state

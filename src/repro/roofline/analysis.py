@@ -1,0 +1,213 @@
+"""Three-term roofline from a compiled (dry-run) artifact.
+
+    compute term    = per-device HLO flops   / 197 TFLOP/s
+    memory term     = per-device HLO bytes   / 819 GB/s
+    collective term = per-device collective bytes / 50 GB/s/link
+
+``cost_analysis()`` on an SPMD module reports the per-partition program
+(calibrated in tests/test_roofline.py), so terms are per-chip directly.
+Collective bytes are NOT in cost_analysis: we parse ``compiled.as_text()``,
+sum result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, and multiply ops inside while bodies by
+the loop trip count (scanned layers execute their collectives L times —
+skipping this undercounts scanned models by ~n_layers x). Convention:
+one op contributes its result-shape bytes (ring all-reduce moves ~2x
+that; we report the uniform convention and compare like against like).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type, tuples summed."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+
+    @property
+    def total(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text."""
+    comps: Dict[str, str] = {}
+    name, lines = None, []
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->.*{", line)
+        if m and not line.startswith(" "):
+            name, lines = m.group(1), []
+            comps[name] = ""
+        elif line.startswith("}"):
+            if name:
+                comps[name] = "\n".join(lines)
+            name = None
+        elif name is not None:
+            lines.append(line)
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond_body: str) -> int:
+    """Heuristic: largest integer constant in the while condition."""
+    consts = [int(c) for c in
+              re.findall(r"constant\((\d+)\)", cond_body)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def analyze(name: str) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = {}            # break cycles defensively
+        body = comps.get(name, "")
+        acc: Dict[str, float] = {}
+        for line in body.splitlines():
+            line = line.strip()
+            m = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*(.+?)\s+"
+                         r"([a-z0-9\-]+)\(", line)
+            if not m:
+                continue
+            rtype, op = m.group(1), m.group(2)
+            if op in _COLLECTIVES or any(op.startswith(c + "-")
+                                         for c in _COLLECTIVES):
+                base = next(c for c in _COLLECTIVES if op.startswith(c))
+                acc[base] = acc.get(base, 0.0) + _shape_bytes(rtype)
+            elif op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                if mb:
+                    trips = _trip_count(comps.get(mc.group(1), "")) \
+                        if mc else 1
+                    sub = analyze(mb.group(1))
+                    for k, v in sub.items():
+                        acc[k] = acc.get(k, 0.0) + trips * v
+            else:
+                for attr in ("calls", "to_apply", "true_computation",
+                             "false_computation", "branch_computations"):
+                    for sub_name in re.findall(
+                            attr + r"=\{?%?([\w\.\-]+)", line):
+                        sub = analyze(sub_name)
+                        for k, v in sub.items():
+                            acc[k] = acc.get(k, 0.0) + v
+        memo[name] = acc
+        return acc
+
+    if entry is None:
+        return CollectiveStats({})
+    return CollectiveStats(analyze(entry))
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    coll_bytes: float            # per device
+    coll_by_kind: Dict[str, float]
+    model_flops: float           # analytic 6ND / 2ND (global)
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / hw.ICI_LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (chips * HLO flops) — remat/redundancy waste."""
+        tot = self.flops * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Achievable fraction of compute roofline if perfectly overlapped:
+        useful compute time / max(all three terms)."""
+        t_useful = (self.model_flops / self.chips) / hw.PEAK_FLOPS_BF16
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_bound if t_bound else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "coll_by_kind": self.coll_by_kind,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def analyze_compiled(compiled, model_flops: float, chips: int) -> Roofline:
+    """Trip-aware terms from the optimized HLO (repro.roofline.hlo_stats);
+    cost_analysis() alone undercounts scanned layers by ~n_layers x."""
+    from repro.roofline.hlo_stats import analyze_hlo
+    stats = analyze_hlo(compiled.as_text())
+    return Roofline(flops=stats.flops, hbm_bytes=stats.bytes,
+                    coll_bytes=stats.coll_total,
+                    coll_by_kind=stats.coll,
+                    model_flops=model_flops, chips=chips)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic useful flops: 6·N·D train, 2·N·D prefill, 2·N_active·B decode."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch

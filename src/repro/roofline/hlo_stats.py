@@ -1,0 +1,236 @@
+"""Trip-aware HLO statistics: flops / HBM bytes / collective bytes.
+
+``compiled.cost_analysis()`` reports the entry computation with while
+bodies counted ONCE — a scanned 28-layer model under-reports by ~28x
+(calibrated in tests/test_roofline.py). This walker parses the optimized
+HLO text, multiplies each while body by its trip count (largest integer
+constant in the loop condition — the lax.scan lowering pattern), and
+accumulates:
+
+  * flops       — 2 * prod(result_dims) * prod(lhs contracting dims) per
+                  ``dot`` (elementwise flops ignored: matmuls dominate LM
+                  steps; stated convention).
+  * bytes       — per materializing op: result bytes + operand bytes
+                  (lookup by symbol table), i.e. write-once/read-per-use,
+                  matching XLA's "bytes accessed" convention. Bookkeeping
+                  ops (bitcast, tuple, get-tuple-element, parameter,
+                  constant) are free.
+  * collectives — result-shape bytes per all-gather / all-reduce /
+                  reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "iota"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    rtype: str
+    kind: str
+    operands: List[str]
+    attrs: str
+
+
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _parse_op(line: str) -> Optional[_Op]:
+    m = _OP_LINE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    # result type: balanced-paren tuple or single token
+    if rest.startswith("("):
+        depth, i = 0, 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        rtype, rest = rest[: i + 1], rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype, rest = rest[:sp], rest[sp + 1:]
+    mk = re.match(r"([a-z][\w\-]*)\((.*)$", rest)
+    if not mk:
+        return None
+    kind = mk.group(1)
+    tail = mk.group(2)
+    # operands: up to the first unnested ')'
+    depth, i = 1, 0
+    for i, ch in enumerate(tail):
+        depth += ch == "("
+        depth -= ch == ")"
+        if depth == 0:
+            break
+    opnds = [t.strip().lstrip("%") for t in tail[:i].split(",") if
+             t.strip().startswith("%")]
+    attrs = tail[i + 1:]
+    return _Op(name, rtype, kind, opnds, attrs)
+
+
+def _split_computations(hlo: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and ("{" in line) and ("->" in line):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            op = _parse_op(line)
+            if op:
+                comps[cur].append(op)
+    return comps
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_ops: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "HloStats", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + mult * v
+        for k, v in other.coll_ops.items():
+            self.coll_ops[k] = self.coll_ops.get(k, 0.0) + mult * v
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.coll.values()))
+
+
+def _dot_flops(op: _Op, table: Dict[str, str]) -> float:
+    out_dims = _shape_dims(op.rtype)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    if not m or not op.operands:
+        return 0.0
+    lhs_type = table.get(op.operands[0], "")
+    lhs_dims = _shape_dims(lhs_type)
+    contract = 1
+    if m.group(1):
+        for d in m.group(1).split(","):
+            di = int(d)
+            if di < len(lhs_dims):
+                contract *= lhs_dims[di]
+    out = 1
+    for d in out_dims:
+        out *= d
+    return 2.0 * out * contract
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    comps = _split_computations(hlo)
+    entry_m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    if not entry_m:
+        return HloStats()
+    entry = entry_m.group(1)
+    memo: Dict[str, HloStats] = {}
+
+    # while trip counts: largest integer constant in the condition body
+    const_by_comp: Dict[str, List[int]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and ("{" in line) and ("->" in line):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            cur = m.group(1) if m else None
+        elif line.startswith("}"):
+            cur = None
+        elif cur:
+            for c in re.findall(r"constant\((\d+)\)", line):
+                const_by_comp.setdefault(cur, []).append(int(c))
+
+    def analyze(name: str) -> HloStats:
+        if name in memo:
+            return memo[name]
+        memo[name] = HloStats()  # cycle guard
+        ops = comps.get(name, [])
+        table = {op.name: op.rtype for op in ops}
+        st = HloStats()
+        for op in ops:
+            base = next((c for c in _COLLECTIVES
+                         if op.kind == c or op.kind.startswith(c + "-")),
+                        None)
+            if base:
+                b = _shape_bytes(op.rtype)
+                st.coll[base] = st.coll.get(base, 0.0) + b
+                st.coll_ops[base] = st.coll_ops.get(base, 0.0) + 1
+                st.bytes += b + sum(_shape_bytes(table.get(o, ""))
+                                    for o in op.operands)
+                continue
+            if op.kind == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", op.attrs)
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.attrs)
+                trips = max(const_by_comp.get(mc.group(1), [1])) \
+                    if mc else 1
+                if mb:
+                    st.add(analyze(mb.group(1)), float(max(trips, 1)))
+                continue
+            if op.kind in ("call", "conditional"):
+                # fused / to_apply computations are NOT descended: their
+                # internals live in registers, the fusion op's own
+                # result+operand bytes are the HBM boundary
+                for attr in ("calls", "to_apply", "true_computation",
+                             "false_computation"):
+                    for sub in re.findall(attr + r"=\{?%?([\w\.\-]+)",
+                                          op.attrs):
+                        st.add(analyze(sub))
+            if op.kind == "dot":
+                st.flops += _dot_flops(op, table)
+            if op.kind in _FREE_OPS:
+                continue
+            st.bytes += _shape_bytes(op.rtype) + sum(
+                _shape_bytes(table.get(o, "")) for o in op.operands)
+        memo[name] = st
+        return st
+
+    return analyze(entry)

@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants (the TARGET platform of this build)."""
+
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_LINK_BW = 50e9           # bytes/s per link (~50 GB/s/link)
+HBM_BYTES = 16 * 2**30       # 16 GiB per chip

@@ -1,0 +1,43 @@
+"""Serving entry points: prefill + single-token serve_step (+ sampling)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import init_cache, lm_decode_step, lm_prefill
+
+
+def prefill(params, cfg, tokens, *, frontend=None, max_len: int
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Fill caches from a prompt; returns (last-token logits, cache)."""
+    return lm_prefill(params, cfg, tokens, frontend=frontend,
+                      max_len=max_len)
+
+
+def serve_step(params, cfg, token, cache, *, key=None,
+               temperature: float = 0.0
+               ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step: (B,1) token -> (B,1) next token + updated cache."""
+    logits, cache = lm_decode_step(params, cfg, token, cache)
+    if temperature <= 0.0 or key is None:
+        nxt = jnp.argmax(logits[:, -1], axis=-1)
+    else:
+        nxt = jax.random.categorical(key, logits[:, -1] / temperature)
+    return nxt[:, None].astype(jnp.int32), cache
+
+
+def generate(params, cfg, prompt, *, steps: int, max_len: int,
+             frontend=None, key=None, temperature: float = 0.0):
+    """Greedy/temperature autoregressive generation (host loop)."""
+    logits, cache = prefill(params, cfg, prompt, frontend=frontend,
+                            max_len=max_len)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for i in range(steps - 1):
+        k = jax.random.fold_in(key, i) if key is not None else None
+        tok, cache = serve_step(params, cfg, tok, cache, key=k,
+                                temperature=temperature)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1), cache

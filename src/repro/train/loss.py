@@ -1,0 +1,31 @@
+"""LM loss: softmax cross-entropy in f32 with z-loss regularization."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits: jax.Array, targets: jax.Array,
+            mask: Optional[jax.Array] = None,
+            z_loss_weight: float = 1e-4) -> Tuple[jax.Array, dict]:
+    """logits (B,S,V) f32; targets (B,S) int; mask (B,S) or None.
+
+    Returns (scalar loss, metrics dict).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - tgt
+    zl = jnp.square(logz)
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss_nll = jnp.sum(nll * mask) / denom
+    loss_z = jnp.sum(zl * mask) / denom
+    loss = loss_nll + z_loss_weight * loss_z
+    acc = jnp.sum((jnp.argmax(logits, -1) == targets) * mask) / denom
+    return loss, {"nll": loss_nll, "z_loss": loss_z, "accuracy": acc,
+                  "tokens": denom}

@@ -1,0 +1,131 @@
+"""Optimizers: AdamW and Adafactor (factored second moments).
+
+Adafactor is what lets the 1T-param kimi config fit the pod: O(n+m) second
+moments instead of O(n*m) and no first moment, ~2 bytes/param of optimizer
+state versus AdamW's 8. Both keep state in f32 regardless of param dtype.
+No optax dependency — state is a plain pytree the checkpointer serializes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adafactor
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    adafactor_min_dim: int = 128  # factor only dims >= this
+
+
+def schedule(opt: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(opt.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - opt.warmup_steps) /
+                    jnp.maximum(opt.decay_steps - opt.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * frac)
+    return opt.lr_peak * warm * cos
+
+
+def _factored(shape, min_dim: int) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def init_opt_state(params, opt: OptConfig):
+    if opt.name == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def v_init(p):
+        if _factored(p.shape, opt.adafactor_min_dim):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(v_init, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array))}
+
+
+def _global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params, grads, state, opt: OptConfig, step: jax.Array):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, opt.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    lr = schedule(opt, step)
+    t = step.astype(jnp.float32) + 1.0
+
+    if opt.name == "adamw":
+        def upd(p, g, m, v):
+            m_new = opt.b1 * m + (1 - opt.b1) * g
+            v_new = opt.b2 * v + (1 - opt.b2) * jnp.square(g)
+            m_hat = m_new / (1 - opt.b1 ** t)
+            v_hat = v_new / (1 - opt.b2 ** t)
+            delta = m_hat / (jnp.sqrt(v_hat) + opt.eps) + \
+                opt.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+                m_new, v_new
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}, \
+            {"grad_norm": gnorm, "lr": lr}
+
+    # ---------------- adafactor
+    decay = 1.0 - t ** -0.8
+
+    def upd(p, g, v):
+        g2 = jnp.square(g) + 1e-30
+        if "vr" in v:
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            r_factor = vr / jnp.maximum(
+                jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            precond = jax.lax.rsqrt(
+                jnp.maximum(r_factor[..., None] * vc[..., None, :], 1e-30))
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vf = decay * v["v"] + (1 - decay) * g2
+            precond = jax.lax.rsqrt(jnp.maximum(vf, 1e-30))
+            new_v = {"v": vf}
+        update = g * precond
+        # update clipping (Shazeer & Stern): RMS <= 1
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        delta = update + opt.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_v
+
+    is_vleaf = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    out = jax.tree.map(upd, params, grads, state["v"],
+                       is_leaf=lambda x: isinstance(x, jax.Array))
+    # out mirrors params-tree with (p, v) tuples at array positions
+    flat, treedef = jax.tree.flatten(
+        out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], jax.Array))
+    new_p = treedef.unflatten([f[0] for f in flat])
+    new_v = treedef.unflatten([f[1] for f in flat])
+    return new_p, {"v": new_v}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,92 @@
+"""The jitted train step: microbatched grads -> clip -> optimizer update.
+
+``make_train_step(cfg)`` returns a function suitable for
+``jax.jit(..., donate_argnums=0)`` and for ``.lower()`` in the dry-run.
+Gradient accumulation splits the global batch into ``cfg.microbatches``
+scan steps (activation memory / cfg.microbatches at the price of re-running
+the forward), composing with the per-arch remat policy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.model import init_lm, lm_forward
+from repro.train.loss import lm_loss
+from repro.train.optimizer import (OptConfig, apply_updates, init_opt_state)
+
+
+def make_train_state(key, cfg, opt: Optional[OptConfig] = None
+                     ) -> Dict[str, Any]:
+    opt = opt or OptConfig(name=cfg.optimizer)
+    params = init_lm(key, cfg)
+    return {"params": params, "opt": init_opt_state(params, opt),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _loss_fn(params, cfg, tokens, targets, frontend):
+    logits, aux = lm_forward(params, cfg, tokens, frontend=frontend)
+    loss, metrics = lm_loss(logits, targets)
+    total = loss + cfg.router_aux_weight * aux
+    metrics = dict(metrics, aux=aux, loss=total)
+    return total, metrics
+
+
+def make_train_step(cfg, opt: Optional[OptConfig] = None):
+    opt = opt or OptConfig(name=cfg.optimizer)
+    nmb = max(cfg.microbatches, 1)
+
+    def train_step(state, batch):
+        tokens, targets = batch["tokens"], batch["targets"]
+        frontend = batch.get("frontend")
+        params = state["params"]
+        grad_fn = jax.value_and_grad(_loss_fn, has_aux=True)
+
+        if nmb == 1:
+            (_, metrics), grads = grad_fn(params, cfg, tokens, targets,
+                                          frontend)
+        else:
+            b = tokens.shape[0]
+            mb = b // nmb
+
+            def split(x):
+                return x.reshape((nmb, mb) + x.shape[1:]) \
+                    if x is not None else None
+
+            mb_batches = (split(tokens), split(targets), split(frontend))
+
+            def body(carry, mb_in):
+                g_acc, m_acc = carry
+                tk, tg, fe = mb_in
+                (_, m), g = grad_fn(params, cfg, tk, tg, fe)
+                g_acc = jax.tree.map(
+                    lambda a, b2: a + b2.astype(jnp.float32) / nmb,
+                    g_acc, g)
+                m_acc = jax.tree.map(lambda a, b2: a + b2 / nmb, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            m0 = {"nll": 0.0, "z_loss": 0.0, "accuracy": 0.0,
+                  "tokens": 0.0, "aux": 0.0, "loss": 0.0}
+            m0 = jax.tree.map(jnp.float32, m0)
+            xs = tuple(x for x in mb_batches if x is not None)
+            if frontend is None:
+                (grads, metrics), _ = lax.scan(
+                    lambda c, x: body(c, (x[0], x[1], None)), (g0, m0),
+                    (mb_batches[0], mb_batches[1]))
+            else:
+                (grads, metrics), _ = lax.scan(
+                    lambda c, x: body(c, x), (g0, m0), xs)
+
+        new_params, new_opt, opt_metrics = apply_updates(
+            params, grads, state["opt"], opt, state["step"])
+        metrics = dict(metrics, **opt_metrics)
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step

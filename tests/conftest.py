@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real device; only launch/dryrun.py (its own process) forces 512.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,60 @@
+"""Baselines: k-means|| improves with rounds; EIM11's broadcast pathology."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
+from repro.core.eim11 import run_eim11
+from repro.core.kmeans_parallel import run_kmeans_parallel
+from repro.core.metrics import centralized_cost
+from repro.core.soccer import run_soccer
+from repro.data.synthetic import gaussian_mixture, shard_points
+
+M, K = 8, 6
+
+
+@pytest.fixture(scope="module")
+def data():
+    spec = GaussianMixtureSpec(n=12_000, dim=10, k=K, sigma=0.001, seed=8)
+    x, _, means = gaussian_mixture(spec)
+    return jnp.asarray(x), jnp.asarray(shard_points(x, M)), means
+
+
+def test_kmeans_parallel_improves_with_rounds(data):
+    xg, parts, _ = data
+    costs = []
+    for r in (1, 3, 5):
+        res = run_kmeans_parallel(parts, k=K, rounds=r, seed=2)
+        costs.append(float(centralized_cost(xg, jnp.asarray(res.centers))))
+    assert costs[2] < costs[0], f"5-round must beat 1-round: {costs}"
+
+
+def test_kmeans_parallel_oversampling_count(data):
+    _, parts, _ = data
+    res = run_kmeans_parallel(parts, k=K, rounds=3, seed=0)
+    # ~l = 2k selections per round (binomial), plus the seed point
+    assert 1 <= res.oversampled.shape[0] <= 3 * (3 * 2 * K) + 1
+    assert res.rounds == 3
+
+
+def test_eim11_runs_and_broadcast_dominates(data):
+    xg, parts, means = data
+    eim = run_eim11(parts, k=K, epsilon=0.1, max_rounds=8, seed=1)
+    soc = run_soccer(parts, SoccerParams(k=K, epsilon=0.1, seed=1))
+    cost_e = float(centralized_cost(xg, jnp.asarray(eim.centers)))
+    ref = float(centralized_cost(xg, jnp.asarray(means)))
+    assert cost_e <= 6.0 * ref, "EIM11 clusters correctly"
+    # the paper's complaint: EIM11 broadcasts orders of magnitude more
+    soccer_broadcast = soc.rounds * soc.const.k_plus
+    assert eim.broadcast_points > 20 * soccer_broadcast, \
+        (eim.broadcast_points, soccer_broadcast)
+
+
+def test_eim11_removes_fixed_fraction(data):
+    _, parts, _ = data
+    eim = run_eim11(parts, k=K, epsilon=0.1, remove_frac=0.5, max_rounds=8,
+                    seed=1)
+    n = eim.n_hist
+    for i in range(min(2, len(n) - 1)):
+        frac = 1 - n[i + 1] / n[i]
+        assert 0.3 <= frac <= 0.7, f"~half removed per round, got {frac}"

@@ -1,0 +1,79 @@
+"""Checkpointer: atomic roundtrip, keep-k GC, elastic SOCCER restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.soccer_paper import SoccerParams
+from repro.core.metrics import centralized_cost
+from repro.core.soccer import (derive_constants, init_state, run_soccer,
+                               soccer_round)
+from repro.core.comm import VirtualCluster
+from repro.data.synthetic import gaussian_mixture, shard_points
+from repro.configs.soccer_paper import GaussianMixtureSpec
+from repro.ft.failures import reshard_state
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": [jnp.ones((2, 3)),
+                                         jnp.zeros((4,), jnp.int32)],
+            "c": {"d": jnp.float32(3.5)}}
+    ck = Checkpointer(str(tmp_path), use_async=False)
+    ck.save(7, tree)
+    template = jax.eval_shape(lambda: tree)
+    got = ck.restore(template)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ck.latest_step() == 7
+
+
+def test_keep_k_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, use_async=False)
+    tree = {"x": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        ck.save(s, jax.tree.map(lambda a: a + s, tree))
+    assert sorted(ck.all_steps()) == [3, 4]
+    got = ck.restore(jax.eval_shape(lambda: tree))
+    np.testing.assert_allclose(np.asarray(got["x"]), 4.0)
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path), use_async=True)
+    ck.save(1, {"x": jnp.ones(5)})
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_soccer_checkpoint_restart_and_elastic(tmp_path):
+    """Interrupt SOCCER after round 1, restore onto 2x the machines,
+    finish, and get a sane cost — checkpoint/restart + elastic scaling."""
+    spec = GaussianMixtureSpec(n=8_000, dim=10, k=5, sigma=0.001, seed=2)
+    x, _, means = gaussian_mixture(spec)
+    parts = jnp.asarray(shard_points(x, 4))
+    params = SoccerParams(k=5, epsilon=0.05, max_rounds=20)
+    const = derive_constants(8_000, parts.shape[1], params,
+                             eta_override=700)
+    comm = VirtualCluster(4)
+    state = init_state(parts, const, jax.random.PRNGKey(0))
+    state = soccer_round(state, comm, const)      # one round
+
+    ck = Checkpointer(str(tmp_path), use_async=False)
+    ck.save(1, state)
+
+    # "restart" on 8 machines
+    restored = ck.restore(jax.eval_shape(lambda: state))
+    state8 = reshard_state(type(state)(*restored), 8)
+    comm8 = VirtualCluster(8)
+    import functools
+    step8 = jax.jit(functools.partial(soccer_round, comm=comm8,
+                                      const=const))
+    from repro.core.soccer import soccer_finalize, flatten_centers
+    rounds = 1
+    while rounds < const.max_rounds and int(state8.n_remaining) > const.eta:
+        state8 = step8(state8)
+        rounds += 1
+    state8 = soccer_finalize(state8, comm8, const)
+    centers = flatten_centers(state8)
+    cost = float(centralized_cost(jnp.asarray(x), jnp.asarray(centers)))
+    ref = float(centralized_cost(jnp.asarray(x), jnp.asarray(means)))
+    assert cost <= 5.0 * ref

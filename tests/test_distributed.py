@@ -1,0 +1,63 @@
+"""Mesh (shard_map) == Virtual equivalence, run in a subprocess with 8
+host devices so the main test process keeps its single real device."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
+from repro.data.synthetic import gaussian_mixture, shard_points
+from repro.core.soccer import run_soccer
+from repro.core.distributed import run_soccer_mesh
+from repro.core.metrics import centralized_cost
+
+spec = GaussianMixtureSpec(n=8_000, dim=10, k=5, sigma=0.001, seed=3)
+x, _, _ = gaussian_mixture(spec)
+parts = jnp.asarray(shard_points(x, 8))
+xg = jnp.asarray(x)
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+out = {}
+for sharded in (False, True):
+    params = SoccerParams(k=5, epsilon=0.1, seed=3,
+                          sharded_coordinator=sharded)
+    rv = run_soccer(parts, params)
+    rm = run_soccer_mesh(parts, params, mesh)
+    out[f"virtual_cost_{sharded}"] = float(
+        centralized_cost(xg, jnp.asarray(rv.centers)))
+    out[f"mesh_cost_{sharded}"] = float(
+        centralized_cost(xg, jnp.asarray(rm.centers)))
+    out[f"rounds_match_{sharded}"] = (rv.rounds == rm.rounds)
+    out[f"centers_allclose_{sharded}"] = bool(
+        rv.centers.shape == rm.centers.shape
+        and np.allclose(rv.centers, rm.centers, atol=1e-3))
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_virtual_equals_mesh_subprocess():
+    env = dict(os.environ)
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, proc.stdout
+    out = json.loads(line[0][len("RESULT "):])
+    # paper-faithful (gather) mode must be bit-comparable
+    assert out["rounds_match_False"]
+    assert out["centers_allclose_False"], out
+    # sharded-coordinator mode: same rounds, comparable cost
+    assert out["rounds_match_True"]
+    assert out["mesh_cost_True"] <= 1.5 * out["virtual_cost_True"] + 1e-3

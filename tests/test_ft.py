@@ -1,0 +1,128 @@
+"""Fault tolerance: machine failures, stragglers, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
+from repro.core.comm import VirtualCluster
+from repro.core.metrics import centralized_cost
+from repro.core.soccer import run_soccer
+from repro.data.synthetic import gaussian_mixture, shard_points
+from repro.ft.compression import compressed_psum, init_error_feedback
+from repro.ft.failures import fail_machines, surviving_fraction
+
+M = 8
+
+
+def _data(n=12_000, k=6):
+    spec = GaussianMixtureSpec(n=n, dim=10, k=k, sigma=0.001, seed=6)
+    x, _, means = gaussian_mixture(spec)
+    return x, means
+
+
+def test_machine_failure_graceful():
+    """Kill 2/8 machines before the run: cost degrades gracefully, not
+    catastrophically (the surviving shards still cover every cluster)."""
+    x, means = _data()
+    parts = jnp.asarray(shard_points(x, M))
+    params = SoccerParams(k=6, epsilon=0.1)
+
+    res_ok = run_soccer(parts, params)
+    # failure injection: build initial state then drop machines
+    from repro.core.soccer import (derive_constants, init_state,
+                                   soccer_round, soccer_finalize,
+                                   flatten_centers)
+    import functools
+    const = derive_constants(x.shape[0], parts.shape[1], params)
+    comm = VirtualCluster(M)
+    state = init_state(parts, const, jax.random.PRNGKey(0))
+    state = fail_machines(state, [2, 5])
+    assert surviving_fraction(state) == 0.75
+    step = jax.jit(functools.partial(soccer_round, comm=comm, const=const))
+    rounds = 0
+    n_rem = int(jnp.sum(state.alive & state.machine_ok[:, None]))
+    while rounds < const.max_rounds and n_rem > const.eta:
+        state = step(state)
+        n_rem = int(state.n_remaining)
+        rounds += 1
+    state = soccer_finalize(state, comm, const)
+    centers = flatten_centers(state)
+
+    xg = jnp.asarray(x)
+    cost_fail = float(centralized_cost(xg, jnp.asarray(centers)))
+    cost_ok = float(centralized_cost(xg, jnp.asarray(res_ok.centers)))
+    ref = float(centralized_cost(xg, jnp.asarray(means)))
+    assert cost_fail <= 4.0 * max(cost_ok, ref), \
+        "failure should not blow up the approximation"
+
+
+def test_stragglers_do_not_break_rounds():
+    x, means = _data()
+    parts = jnp.asarray(shard_points(x, M))
+    res = run_soccer(parts, SoccerParams(k=6, epsilon=0.1,
+                                         straggler_rate=0.3, seed=3))
+    xg = jnp.asarray(x)
+    cost = float(centralized_cost(xg, jnp.asarray(res.centers)))
+    ref = float(centralized_cost(xg, jnp.asarray(means)))
+    assert res.rounds <= res.const.max_rounds
+    assert cost <= 4.0 * ref
+
+
+def test_topk_compression_converges():
+    """EF top-k SGD on a quadratic reaches the optimum."""
+    m, dim = 4, 64
+    rng = np.random.default_rng(0)
+    target = jnp.asarray(rng.normal(size=(dim,)), jnp.float32)
+    # per-machine quadratic pieces: f_j(x) = ||x - target + b_j||^2
+    offsets = jnp.asarray(rng.normal(size=(m, dim)) * 0.1, jnp.float32)
+    comm = VirtualCluster(m)
+
+    x = jnp.zeros((dim,))
+    err = init_error_feedback(jnp.zeros((m, dim)))
+    dist_hist = []
+    opt = target - jnp.mean(offsets, axis=0)
+    step_fn = jax.jit(lambda x, err: compressed_psum(
+        comm, jax.vmap(lambda o: 2 * (x - target + o))(offsets), err, k=8))
+    for step in range(700):
+        mean_g, err, nbytes = step_fn(x, err)
+        x = x - 0.05 * mean_g
+        if step in (99, 699):
+            dist_hist.append(float(jnp.linalg.norm(x - opt)))
+    assert dist_hist[-1] < 0.1, dist_hist
+    assert dist_hist[-1] < dist_hist[0], "error feedback keeps converging" 
+    assert int(nbytes) == m * 8 * 8
+
+
+def test_compression_bytes_savings():
+    dense_bytes = 2 * 64 * 4              # ring all-reduce approx
+    m, k = 4, 8
+    assert m * k * 8 < dense_bytes * m    # per step, this toy size
+
+
+def test_outlier_robust_finalize():
+    """Paper §9 future work: with gross outliers injected, the robust
+    finalize keeps the INLIER cost near-optimal; the plain variant's
+    final centers get dragged."""
+    import numpy as np
+    from repro.data.synthetic import gaussian_mixture, shard_points
+    from repro.configs.soccer_paper import GaussianMixtureSpec
+    x, means = _data(n=12_000, k=6)
+    rng = np.random.default_rng(3)
+    n_out = 120
+    outliers = rng.normal(0, 300.0, size=(n_out, x.shape[1])).astype(
+        np.float32)
+    x_all = np.concatenate([x, outliers])
+    rng.shuffle(x_all)
+    parts = jnp.asarray(shard_points(x_all, M))
+    inliers = jnp.asarray(x)
+
+    costs = {}
+    for frac in (0.0, 0.02):
+        res = run_soccer(parts, SoccerParams(k=6, epsilon=0.1, seed=5,
+                                             outlier_frac=frac))
+        costs[frac] = float(centralized_cost(
+            inliers, jnp.asarray(res.centers)))
+    ref = float(centralized_cost(inliers, jnp.asarray(means)))
+    assert costs[0.02] <= 3.0 * ref, costs
+    assert costs[0.02] <= costs[0.0] * 1.05, \
+        f"robust should not be worse on inliers: {costs}"

@@ -1,0 +1,78 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode).
+
+The CPU container executes the kernel bodies in Python via interpret=True;
+the BlockSpec tiling/grid logic is identical to the TPU path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.lloyd import lloyd_reduce_pallas
+from repro.kernels.min_dist import min_dist_pallas
+
+SHAPES = [
+    (64, 7, 5),       # tiny, non-aligned everything
+    (300, 37, 17),    # non-multiples of blocks
+    (1024, 128, 15),  # aligned n/k, odd d
+    (513, 200, 64),
+    (128, 1, 3),      # single center
+]
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("n,k,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_min_dist_matches_ref(n, k, d, dtype):
+    rng = np.random.default_rng(n + k + d)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    c = jnp.asarray(rng.normal(size=(k, d)), dtype)
+    d2_ref, idx_ref = ref.min_dist_ref(x, c)
+    d2_pl, idx_pl = min_dist_pallas(x, c, interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(d2_pl, d2_ref, rtol=tol, atol=tol)
+    # argmin ties can differ legitimately; check distances at chosen idx
+    d2_at = jnp.sum((x.astype(jnp.float32) -
+                     c.astype(jnp.float32)[idx_pl]) ** 2, -1)
+    np.testing.assert_allclose(d2_at, d2_ref, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,k,d", SHAPES)
+def test_min_dist_center_mask(n, k, d):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    valid = jnp.asarray(rng.random(k) > 0.3)
+    valid = valid.at[0].set(True)      # keep at least one center
+    d2_ref, idx_ref = ref.min_dist_ref(x, c, valid)
+    d2_pl, idx_pl = min_dist_pallas(x, c, valid, interpret=True)
+    np.testing.assert_allclose(d2_pl, d2_ref, rtol=1e-4, atol=1e-4)
+    assert bool(jnp.all(valid[idx_pl]))
+
+
+@pytest.mark.parametrize("n,k,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_lloyd_reduce_matches_ref(n, k, d, dtype):
+    rng = np.random.default_rng(n * 3 + k + d)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    s_ref, c_ref = ref.lloyd_reduce_ref(x, w, assign, k)
+    s_pl, c_pl = lloyd_reduce_pallas(x, w, assign, k, interpret=True)
+    tol = 1e-3 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(s_pl, s_ref, rtol=tol, atol=tol)
+    np.testing.assert_allclose(c_pl, c_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_ref_chunked_matches_unchunked():
+    """The streaming (EIM11-sized) ref path == the one-panel path."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(200, 9)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(5000, 9)), jnp.float32)
+    from repro.kernels.ref import _CHUNK_K
+    d2_small, idx_small = ref.min_dist_ref(x, c[:100])
+    d2_big, idx_big = ref.min_dist_ref(x, c)      # chunked path (k > 4096)
+    brute = jnp.min(jnp.sum((x[:, None] - c[None]) ** 2, -1), axis=1)
+    np.testing.assert_allclose(d2_big, brute, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,77 @@
+"""Centralized black box A: k-means++/Lloyd/minibatch behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import kmeans, kmeans_plusplus, lloyd
+from repro.core.metrics import centralized_cost
+from repro.core.minibatch import minibatch_kmeans
+
+
+def _blobs(n=600, k=6, d=5, sigma=0.02, seed=0):
+    rng = np.random.default_rng(seed)
+    means = rng.uniform(size=(k, d)).astype(np.float32)
+    lbl = rng.integers(0, k, n)
+    return jnp.asarray(means[lbl] + sigma * rng.normal(size=(n, d))), means
+
+
+def test_lloyd_monotone():
+    x, _ = _blobs()
+    w = jnp.ones(x.shape[0])
+    init = kmeans_plusplus(jax.random.PRNGKey(0), x, w, 6)
+    costs = []
+    c = init
+    for _ in range(6):
+        c, cost = lloyd(x, w, c, iters=1)
+        costs.append(float(cost))
+    assert all(costs[i + 1] <= costs[i] + 1e-5 for i in range(len(costs) - 1))
+
+
+def test_kmeanspp_beats_random():
+    x, _ = _blobs(seed=3)
+    w = jnp.ones(x.shape[0])
+    key = jax.random.PRNGKey(1)
+    pp = kmeans_plusplus(key, x, w, 6)
+    rand_idx = jax.random.choice(key, x.shape[0], (6,), replace=False)
+    cost_pp = float(centralized_cost(x, pp))
+    cost_rand = float(centralized_cost(x, x[rand_idx]))
+    assert cost_pp <= cost_rand * 1.5  # D^2 seeding is no worse (usually ≪)
+
+
+def test_weighted_equals_duplicated():
+    """kmeans on (x, w=2) == kmeans on x duplicated, same seed."""
+    x, _ = _blobs(n=200, seed=5)
+    w2 = jnp.full(200, 2.0)
+    c_w, cost_w = kmeans(jax.random.PRNGKey(2), x, w2, 4)
+    x_dup = jnp.concatenate([x, x])
+    # D^2 sampling differs by point order; compare final COST per unit weight
+    c_d, cost_d = kmeans(jax.random.PRNGKey(2), x_dup,
+                         jnp.ones(400), 4)
+    assert abs(float(cost_w) - float(cost_d)) / max(float(cost_d), 1e-9) < 0.35
+
+
+def test_zero_weight_points_ignored():
+    x, _ = _blobs(n=300, seed=7)
+    w = jnp.ones(300).at[150:].set(0.0)
+    # put garbage in the zero-weight region
+    x = x.at[150:].set(1e3)
+    c, cost = kmeans(jax.random.PRNGKey(0), x, w, 4)
+    assert bool(jnp.all(jnp.abs(c) < 100.0))  # never seeded on garbage
+    assert float(cost) < 50.0  # garbage points (|x|=1e3) would cost ~1e8
+
+
+def test_minibatch_reasonable():
+    x, means = _blobs(n=2000, k=5, seed=9)
+    w = jnp.ones(2000)
+    c, cost = minibatch_kmeans(jax.random.PRNGKey(3), x, w, 5,
+                               batch=256, steps=40)
+    full = float(centralized_cost(x, jnp.asarray(means)))
+    assert float(cost) < 4.0 * max(full, 1e-6) + 1.0
+
+
+def test_more_centers_never_worse():
+    x, _ = _blobs(seed=11)
+    w = jnp.ones(x.shape[0])
+    _, c4 = kmeans(jax.random.PRNGKey(4), x, w, 4)
+    _, c12 = kmeans(jax.random.PRNGKey(4), x, w, 12)
+    assert float(c12) <= float(c4) * 1.05

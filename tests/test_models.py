@@ -1,0 +1,111 @@
+"""Per-arch smoke tests (reduced configs) + consistency oracles.
+
+Every assigned architecture: one forward + one train step on CPU with
+asserted output shapes and finiteness, plus prefill+decode == full-forward
+logit consistency (the strongest cache-correctness check).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models.model import (init_cache, init_lm, lm_decode_step,
+                                lm_forward, lm_prefill)
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import make_train_state, make_train_step
+
+B, S = 2, 16
+
+
+def _batch(cfg, key=1):
+    tokens = jax.random.randint(jax.random.PRNGKey(key), (B, S), 0,
+                                cfg.vocab_size)
+    fe = None
+    if cfg.n_frontend_tokens:
+        fe = jax.random.normal(jax.random.PRNGKey(key + 1),
+                               (B, cfg.n_frontend_tokens, cfg.d_model)) * 0.1
+    return tokens, fe
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    tokens, fe = _batch(cfg)
+    logits, aux = lm_forward(params, cfg, tokens, frontend=fe)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    tokens, fe = _batch(cfg)
+    logits, _ = lm_forward(params, cfg, tokens, frontend=fe)
+    _, cache = lm_prefill(params, cfg, tokens[:, : S - 1], frontend=fe,
+                          max_len=S + 4)
+    lg, cache = lm_decode_step(params, cfg, tokens[:, S - 1: S], cache)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(logits[:, S - 1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    opt = OptConfig(name=cfg.optimizer, warmup_steps=1, decay_steps=10)
+    state = make_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    tokens, fe = _batch(cfg)
+    batch = {"tokens": tokens, "targets": jnp.roll(tokens, -1, 1)}
+    if fe is not None:
+        batch["frontend"] = fe
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(state["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mixtral-8x22b"])
+def test_microbatch_grad_accumulation(arch):
+    """nmb=2 training matches nmb=1 to accumulation tolerance."""
+    import dataclasses
+    cfg1 = get_config(arch).reduced()
+    cfg2 = dataclasses.replace(cfg1, microbatches=2)
+    opt = OptConfig(name="adamw", warmup_steps=0, decay_steps=10,
+                    lr_peak=1e-2)
+    tokens, _ = _batch(cfg1)
+    batch = {"tokens": tokens, "targets": jnp.roll(tokens, -1, 1)}
+    outs = {}
+    for cfg in (cfg1, cfg2):
+        state = make_train_state(jax.random.PRNGKey(0), cfg, opt)
+        step = jax.jit(make_train_step(cfg, opt))
+        state, m = step(state, batch)
+        outs[cfg.microbatches] = (
+            float(m["nll"]),
+            np.asarray(jax.tree.leaves(state["params"])[0]))
+    np.testing.assert_allclose(outs[1][0], outs[2][0], rtol=1e-4)
+    np.testing.assert_allclose(outs[1][1], outs[2][1], rtol=1e-3, atol=1e-5)
+
+
+def test_cache_constructor_matches_prefill_structure():
+    """init_cache (dry-run source of truth) == lm_prefill cache pytree."""
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch).reduced()
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        tokens, fe = _batch(cfg)
+        _, cache = lm_prefill(params, cfg, tokens, frontend=fe,
+                              max_len=S + 4)
+        template = jax.eval_shape(lambda: init_cache(cfg, B, S + 4))
+        got = jax.tree.structure(cache)
+        want = jax.tree.structure(template)
+        assert got == want, f"{arch}: cache structure mismatch"
+        mism = [
+            (kp, a.shape, b.shape) for (kp, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(cache)[0],
+                jax.tree_util.tree_flatten_with_path(template)[0])
+            if a.shape != b.shape]
+        assert not mism, f"{arch}: {mism[:4]}"

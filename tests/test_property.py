@@ -1,0 +1,94 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.comm import VirtualCluster
+from repro.core.soccer import derive_constants, init_state, soccer_round
+from repro.configs.soccer_paper import SoccerParams
+from repro.kernels import ref
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 6),
+    p=st.integers(30, 80),
+    k=st.integers(2, 5),
+    seed=st.integers(0, 100),
+)
+def test_round_invariants(m, p, k, seed):
+    """One SOCCER round: alive set shrinks monotonically, n_remaining is
+    exact, threshold is non-negative, C_iter rows are finite."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, p, 3)), jnp.float32)
+    params = SoccerParams(k=k, epsilon=0.3, lloyd_iters=4)
+    const = derive_constants(m * p, p, params, eta_override=min(m * p, 50))
+    comm = VirtualCluster(m)
+    state = init_state(x, const, jax.random.PRNGKey(seed))
+    new = soccer_round(state, comm, const)
+    alive0 = np.asarray(state.alive)
+    alive1 = np.asarray(new.alive)
+    assert not (alive1 & ~alive0).any(), "removal never resurrects points"
+    assert int(new.n_remaining) == int(alive1.sum())
+    assert float(new.v_hist[0]) >= 0.0
+    assert np.isfinite(np.asarray(new.centers)).all()
+    assert int(new.round_idx) == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 128),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 1000),
+)
+def test_min_dist_invariants(n, k, seed):
+    """d2 >= 0; d2 == distance to the argmin center; adding a center can
+    only lower the min distance."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, 4)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, 4)), jnp.float32)
+    d2, idx = ref.min_dist_ref(x, c)
+    assert (np.asarray(d2) >= 0).all()
+    d_at = jnp.sum((x - c[idx]) ** 2, -1)
+    np.testing.assert_allclose(d2, d_at, rtol=1e-4, atol=1e-4)
+    c2 = jnp.concatenate([c, x[:1]], axis=0)
+    d2b, _ = ref.min_dist_ref(x, c2)
+    assert (np.asarray(d2b) <= np.asarray(d2) + 1e-5).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 200), k=st.integers(1, 16),
+       seed=st.integers(0, 1000))
+def test_lloyd_reduce_conservation(n, k, seed):
+    """Sum of per-center sums == weighted sum of points (mass conserved)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    a = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    sums, counts = ref.lloyd_reduce_ref(x, w, a, k)
+    np.testing.assert_allclose(np.asarray(jnp.sum(sums, 0)),
+                               np.asarray(jnp.sum(x * w[:, None], 0)),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(jnp.sum(counts)), float(jnp.sum(w)),
+                               rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_apportion_then_gather_mass(seed):
+    """End-to-end sampling is an unbiased population-mass estimator."""
+    from repro.core.sampling import draw_global_sample
+    rng = np.random.default_rng(seed)
+    m, p = 5, 60
+    x = jnp.asarray(rng.normal(size=(m, p, 2)), jnp.float32)
+    alive = jnp.asarray(rng.random((m, p)) < 0.7)
+    comm = VirtualCluster(m)
+    n_vec = jnp.sum(alive, 1).astype(jnp.int32)
+    total = int(min(int(n_vec.sum()), 50))
+    if total == 0:
+        return
+    _, ws, _ = draw_global_sample(comm, jax.random.PRNGKey(seed), x,
+                                  jnp.ones((m, p)), alive, n_vec, total, p)
+    np.testing.assert_allclose(float(jnp.sum(ws)), float(jnp.sum(alive)),
+                               rtol=0.05)

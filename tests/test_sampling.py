@@ -1,0 +1,87 @@
+"""Exact-size distributed sampling: apportionment + gather properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.comm import VirtualCluster
+from repro.core.sampling import (apportion, draw_global_sample,
+                                 exclusive_cumsum, sample_local)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    counts=st.lists(st.integers(0, 5000), min_size=1, max_size=24),
+    total=st.integers(1, 8000),
+)
+def test_apportion_properties(counts, total):
+    c = apportion(jnp.asarray(counts, jnp.int32), total)
+    c = np.asarray(c)
+    counts = np.asarray(counts)
+    assert (c >= 0).all()
+    assert (c <= counts).all(), "never draw more than a machine holds"
+    want = min(total, counts.sum())
+    assert abs(int(c.sum()) - want) <= len(counts), \
+        "within float-rounding slack of the budget"
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    p=st.integers(4, 64),
+    alive_frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 1000),
+)
+def test_sample_local_draws_only_alive(p, alive_frac, seed):
+    rng = np.random.default_rng(seed)
+    alive = jnp.asarray(rng.random(p) < alive_frac)
+    n_alive = int(alive.sum())
+    c = jnp.int32(max(min(n_alive, p // 2), 0))
+    idx, take = sample_local(jax.random.PRNGKey(seed), alive, c, cap=p)
+    idx, take = np.asarray(idx), np.asarray(take)
+    assert take.sum() == int(c)
+    chosen = idx[: int(c)]
+    assert np.asarray(alive)[chosen].all()
+    assert len(set(chosen.tolist())) == int(c), "without replacement"
+
+
+def test_draw_global_sample_exact_and_weighted():
+    m, p, d = 6, 100, 3
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, p, d)), jnp.float32)
+    w = jnp.ones((m, p), jnp.float32)
+    alive = jnp.asarray(rng.random((m, p)) < 0.8)
+    comm = VirtualCluster(m)
+    n_vec = jnp.sum(alive, axis=1).astype(jnp.int32)
+    total = 120
+    pts, ws, real = draw_global_sample(
+        comm, jax.random.PRNGKey(1), x, w, alive, n_vec, total, p)
+    ws = np.asarray(ws)
+    got = int((ws > 0).sum())
+    assert abs(got - total) <= m
+    assert int(real) == got
+    # HT weights: total estimated mass == population size
+    n_alive = float(jnp.sum(alive))
+    np.testing.assert_allclose(ws.sum(), n_alive, rtol=0.02)
+
+
+def test_draw_global_sample_imbalanced_machines():
+    """One machine holds almost everything; no padding overflow/loss."""
+    m, p, d = 4, 200, 2
+    alive = np.zeros((m, p), bool)
+    alive[0, :] = True            # machine 0: 200 points
+    alive[1, :5] = True           # machine 1: 5
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(m, p, d)),
+                    jnp.float32)
+    comm = VirtualCluster(m)
+    n_vec = jnp.sum(jnp.asarray(alive), axis=1).astype(jnp.int32)
+    pts, ws, real = draw_global_sample(
+        comm, jax.random.PRNGKey(2), x, jnp.ones((m, p)),
+        jnp.asarray(alive), n_vec, 64, p)
+    assert abs(int(real) - 64) <= m
+    np.testing.assert_allclose(float(jnp.sum(ws)), 205.0, rtol=0.05)
+
+
+def test_exclusive_cumsum():
+    c = jnp.asarray([3, 0, 5, 2], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(exclusive_cumsum(c)),
+                                  [0, 3, 3, 8])

@@ -1,0 +1,110 @@
+"""Sequence-model internals: chunked==sequential oracles, flash==dense."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import mamba2, xlstm
+from repro.models.attention import attention_core
+
+CFG = ArchConfig(name="t", family="hybrid", d_model=32, n_heads=4,
+                 n_kv_heads=4, d_ff=64, vocab_size=64, ssm_state=16,
+                 ssm_head_dim=16, param_dtype="float32",
+                 compute_dtype="float32")
+
+
+@pytest.mark.parametrize("s", [17, 256, 300])
+def test_mamba2_chunked_equals_sequential(s):
+    p = mamba2.init_mamba2(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, s, 32))
+    y_c, _ = mamba2.mamba2_apply(p, CFG, x)
+    y_s, _ = mamba2.mamba2_apply(p, CFG, x, sequential=True)
+    np.testing.assert_allclose(y_c, y_s, rtol=2e-4, atol=2e-4)
+
+
+def test_mamba2_decode_matches_full():
+    p = mamba2.init_mamba2(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    y_full, _ = mamba2.mamba2_apply(p, CFG, x, sequential=True)
+    st = mamba2.init_ssm_state(CFG, 2)
+    _, st = mamba2.mamba2_apply(p, CFG, x[:, :63], state=st)
+    y_step, _ = mamba2.mamba2_apply(p, CFG, x[:, 63:], state=st, decode=True)
+    np.testing.assert_allclose(y_step[:, 0], y_full[:, 63],
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("s", [33, 256, 300])
+def test_mlstm_chunked_equals_sequential(s):
+    p = xlstm.init_mlstm(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, s, 32)) * 0.5
+    y_c, _ = xlstm.mlstm_apply(p, CFG, x)
+    y_s, _ = xlstm.mlstm_apply(p, CFG, x, sequential=True)
+    np.testing.assert_allclose(y_c, y_s, rtol=3e-4, atol=3e-4)
+
+
+def test_mlstm_decode_matches_full():
+    p = xlstm.init_mlstm(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 50, 32)) * 0.5
+    y_full, _ = xlstm.mlstm_apply(p, CFG, x, sequential=True)
+    st = xlstm.init_mlstm_state(CFG, 2)
+    _, st = xlstm.mlstm_apply(p, CFG, x[:, :49], state=st)
+    y_step, _ = xlstm.mlstm_apply(p, CFG, x[:, 49:], state=st, decode=True)
+    np.testing.assert_allclose(y_step[:, 0], y_full[:, 49],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_slstm_decode_matches_full():
+    p = xlstm.init_slstm(jax.random.PRNGKey(2), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 40, 32)) * 0.5
+    y_full, _ = xlstm.slstm_apply(p, CFG, x)
+    st = xlstm.init_slstm_state(CFG, 2)
+    _, st = xlstm.slstm_apply(p, CFG, x[:, :39], state=st)
+    y_step, _ = xlstm.slstm_apply(p, CFG, x[:, 39:], state=st, decode=True)
+    np.testing.assert_allclose(y_step[:, 0], y_full[:, 39],
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("gqa", [(8, 8), (8, 2)])
+def test_flash_equals_dense_fwd_bwd(window, gqa):
+    h, kv = gqa
+    b, sq, hd = 2, 50, 16
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, sq, h, hd)) * 0.3
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, sq, kv, hd)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, sq, kv, hd)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(sq)[None], (b, sq))
+
+    def loss(force):
+        def f(q, k, v):
+            o = attention_core(q, k, v, q_pos=pos, kv_pos=pos, causal=True,
+                               window=window, force=force)
+            return jnp.sum(jnp.sin(3 * o))
+        return f
+
+    od, of = loss("dense")(q, k, v), loss("flash")(q, k, v)
+    np.testing.assert_allclose(od, of, rtol=1e-4, atol=1e-4)
+    gd = jax.grad(loss("dense"), (0, 1, 2))(q, k, v)
+    gf = jax.grad(loss("flash"), (0, 1, 2))(q, k, v)
+    for a, c in zip(gd, gf):
+        np.testing.assert_allclose(a, c, rtol=1e-3, atol=1e-4)
+
+
+def test_flash_respects_kv_validity():
+    """Masked (invalid) cache slots contribute nothing."""
+    b, sq, h, hd, skv = 1, 1, 2, 8, 40
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, sq, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, skv, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, skv, h, hd))
+    pos_q = jnp.full((b, sq), 100, jnp.int32)
+    pos_kv = jnp.broadcast_to(jnp.arange(skv)[None], (b, skv))
+    valid = (pos_kv < 10)
+    o_masked = attention_core(q, k, v, q_pos=pos_q, kv_pos=pos_kv,
+                              kv_valid=valid, causal=True, window=0,
+                              force="flash")
+    o_trunc = attention_core(q, k[:, :10], v[:, :10], q_pos=pos_q,
+                             kv_pos=pos_kv[:, :10], causal=True, window=0,
+                             force="dense")
+    np.testing.assert_allclose(o_masked, o_trunc, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,81 @@
+"""Partitioner rules: every assigned arch gets valid, divisible specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models.model import init_lm
+from repro.sharding.partition import Partitioner
+
+
+class FakeMesh:
+    """Stand-in mesh (tests run on 1 device; specs only need names/shape)."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("mesh_shape,axes", [
+    ((16, 16), ("data", "model")),
+    ((2, 16, 16), ("pod", "data", "model")),
+])
+def test_specs_divisible(arch, mesh_shape, axes):
+    cfg = get_config(arch)
+    mesh = FakeMesh(mesh_shape, axes)
+    sizes = dict(zip(axes, mesh_shape))
+    if cfg.sharding_policy == "fsdp":
+        part = Partitioner(mesh, fsdp_axes=axes, tp_axis="__none__")
+    else:
+        part = Partitioner(mesh)
+    params = jax.eval_shape(lambda k: init_lm(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = part.specs(params)
+
+    leaves_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    leaves_s = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(leaves_p) == len(leaves_s)
+    n_sharded = 0
+    for (path, leaf), spec in zip(leaves_p, leaves_s):
+        assert len(spec) <= leaf.ndim, (path, leaf.shape, spec)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            n_sharded += 1
+            names = (ax,) if isinstance(ax, str) else ax
+            total = int(np.prod([sizes[a] for a in names]))
+            assert dim % total == 0, (path, leaf.shape, spec)
+    assert n_sharded > 0, "at least some parameters must be sharded"
+
+
+@pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "mixtral-8x22b",
+                                  "mistral-nemo-12b"])
+def test_big_models_fit_hbm(arch):
+    """Param + optimizer bytes per chip under the 16 GiB HBM on the
+    multi-pod mesh (the reason kimi uses adafactor)."""
+    cfg = get_config(arch)
+    mesh = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    part = Partitioner(mesh)
+    params = jax.eval_shape(lambda k: init_lm(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = part.specs(params)
+    sizes = {"pod": 2, "data": 16, "model": 16}
+
+    def shard_bytes(leaf, spec):
+        n = leaf.size * leaf.dtype.itemsize
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            names = (ax,) if isinstance(ax, str) else ax
+            n //= int(np.prod([sizes[a] for a in names]))
+        return n
+
+    leaves_p = jax.tree.leaves(params)
+    leaves_s = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    per_dev = sum(shard_bytes(l, s) for l, s in zip(leaves_p, leaves_s))
+    opt_mult = {"adamw": 1 + 4.0, "adafactor": 1 + 0.1}[cfg.optimizer]
+    # bf16 params; adamw adds 2x f32 moments (4x bytes); adafactor ~0.1x
+    assert per_dev * opt_mult < 14 * 2**30, \
+        f"{arch}: {per_dev * opt_mult / 2**30:.1f} GiB/chip"

@@ -1,0 +1,140 @@
+"""End-to-end behaviour of SOCCER against the paper's claims.
+
+* Theorem 7.1 analogue: one round on a (well-separated) Gaussian mixture.
+* Theorem 4.1: rounds bound; |C_out| <= I*k_plus + k; constant cost factor
+  vs the optimal mixture means; per-round uplink <= 2*eta.
+* Theorem 7.2: the k-means|| hard instance — SOCCER one round + optimal,
+  k-means|| with 1 round catastrophically worse.
+* Paper §8 sanity: SOCCER cost beats 1-round k-means||.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
+from repro.core.comm import VirtualCluster
+from repro.core.kmeans_parallel import run_kmeans_parallel
+from repro.core.metrics import centralized_cost
+from repro.core.reduce import weighted_reduce
+from repro.core.soccer import run_soccer
+from repro.data.synthetic import (gaussian_mixture,
+                                  kmeans_parallel_hard_instance,
+                                  shard_points)
+
+K, M = 8, 8
+
+
+@pytest.fixture(scope="module")
+def mixture():
+    spec = GaussianMixtureSpec(n=16_000, dim=15, k=K, sigma=0.001, seed=4)
+    x, labels, means = gaussian_mixture(spec)
+    return x, means, spec
+
+
+@pytest.fixture(scope="module")
+def soccer_result(mixture):
+    x, _, _ = mixture
+    parts = jnp.asarray(shard_points(x, M))
+    return run_soccer(parts, SoccerParams(k=K, epsilon=0.1, n_machines=M))
+
+
+def test_soccer_single_round_on_gaussians(soccer_result):
+    res = soccer_result
+    assert res.rounds == 1, "Theorem 7.1: one round on Gaussian mixtures"
+    assert res.n_hist[1] == 0, "every point removed in round 1"
+
+
+def test_soccer_cost_constant_factor(mixture, soccer_result):
+    x, means, _ = mixture
+    res = soccer_result
+    xg = jnp.asarray(x)
+    cost = float(centralized_cost(xg, jnp.asarray(res.centers)))
+    ref = float(centralized_cost(xg, jnp.asarray(means)))  # ~optimal
+    # paper bound is I*(80*beta+44); in practice ~1x. Allow 3x.
+    assert cost <= 3.0 * ref
+    assert res.rounds <= res.const.max_rounds
+    assert res.centers.shape[0] <= res.rounds * res.const.k_plus + K
+
+
+def test_soccer_reduction_to_k(mixture, soccer_result):
+    x, means, _ = mixture
+    res = soccer_result
+    comm = VirtualCluster(M)
+    parts = jnp.asarray(shard_points(x, M))
+    final = weighted_reduce(
+        jax.random.PRNGKey(0), comm, parts,
+        jnp.ones(parts.shape[:2]), jnp.asarray(res.centers), k=K)
+    assert final.shape == (K, 15)
+    xg = jnp.asarray(x)
+    cost_k = float(centralized_cost(xg, final))
+    ref = float(centralized_cost(xg, jnp.asarray(means)))
+    assert cost_k <= 4.0 * ref
+
+
+def test_uplink_bound(soccer_result):
+    """Thm 4.1: <= 2*eta points uploaded per round (+ finalize gather)."""
+    res = soccer_result
+    for r in range(res.rounds):
+        assert res.uplink[r] <= 2 * res.const.eta + M
+
+
+def test_theorem_7_2_hard_instance():
+    """k-means|| needs ~k-1 rounds; SOCCER one round, near-zero cost."""
+    k = 6
+    x = kmeans_parallel_hard_instance(k=k, z=800, dim=2, spread=100.0)
+    rng = np.random.default_rng(0)
+    rng.shuffle(x)
+    parts = jnp.asarray(shard_points(x, M))
+    xg = jnp.asarray(x)
+
+    res = run_soccer(parts, SoccerParams(k=k, epsilon=0.15, seed=1))
+    soccer_cost = float(centralized_cost(xg, jnp.asarray(res.centers)))
+    assert res.rounds == 1
+    assert soccer_cost < 1e-3, "P1 contains every distinct point w.h.p."
+
+    kmpar = run_kmeans_parallel(parts, k=k, rounds=1, seed=1)
+    par_cost = float(centralized_cost(xg, jnp.asarray(kmpar.centers)))
+    assert par_cost > 1e3 * max(soccer_cost, 1e-9), \
+        "hard instance: 1-round k-means|| has no finite approx factor"
+
+
+def test_soccer_beats_one_round_kmeans_parallel(mixture, soccer_result):
+    x, _, _ = mixture
+    parts = jnp.asarray(shard_points(x, M))
+    xg = jnp.asarray(x)
+    soccer_cost = float(centralized_cost(
+        xg, jnp.asarray(soccer_result.centers)))
+    kp = run_kmeans_parallel(parts, k=K, rounds=1)
+    kp_cost = float(centralized_cost(xg, jnp.asarray(kp.centers)))
+    assert soccer_cost < kp_cost, "paper Table 2, one-round comparison"
+
+
+def test_multiround_small_coordinator(mixture):
+    """Tiny eta -> multiple rounds, still bounded and convergent."""
+    x, means, _ = mixture
+    parts = jnp.asarray(shard_points(x, M))
+    res = run_soccer(parts, SoccerParams(k=K, epsilon=0.05, max_rounds=25),
+                     eta_override=900)
+    assert 1 <= res.rounds <= 25
+    ns = res.n_hist[: res.rounds + 1]
+    assert all(ns[i + 1] < ns[i] for i in range(res.rounds))
+    xg = jnp.asarray(x)
+    cost = float(centralized_cost(xg, jnp.asarray(res.centers)))
+    ref = float(centralized_cost(xg, jnp.asarray(means)))
+    assert cost <= 5.0 * ref
+
+
+def test_sharded_coordinator_matches_gather(mixture):
+    """Beyond-paper sharded coordinator ~= paper-faithful gather mode."""
+    x, means, _ = mixture
+    parts = jnp.asarray(shard_points(x, M))
+    xg = jnp.asarray(x)
+    ref = float(centralized_cost(xg, jnp.asarray(means)))
+    costs = {}
+    for sharded in (False, True):
+        res = run_soccer(parts, SoccerParams(
+            k=K, epsilon=0.1, sharded_coordinator=sharded, seed=7))
+        costs[sharded] = float(
+            centralized_cost(xg, jnp.asarray(res.centers)))
+    assert costs[True] <= 1.5 * costs[False] + 0.1 * ref

@@ -1,0 +1,68 @@
+"""Weighted l-truncated cost vs a naive oracle + hypothesis properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.truncated_cost import (removal_threshold,
+                                       weighted_top_mass,
+                                       weighted_truncated_cost)
+
+
+def naive_truncated(d2, w, mass):
+    """Drop the largest-d2 points totalling `mass` weight (fractional)."""
+    order = np.argsort(-d2)
+    total = 0.0
+    remaining = mass
+    for i in order:
+        take = min(w[i], remaining)
+        remaining -= take
+        total += (w[i] - take) * d2[i]
+    return total
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 60),
+    mass_frac=st.floats(0.0, 1.5),
+    seed=st.integers(0, 999),
+)
+def test_matches_naive_oracle(n, mass_frac, seed):
+    rng = np.random.default_rng(seed)
+    d2 = rng.random(n).astype(np.float32) * 10
+    w = rng.random(n).astype(np.float32) + 0.01
+    mass = np.float32(mass_frac * w.sum())
+    got = float(weighted_truncated_cost(jnp.asarray(d2), jnp.asarray(w),
+                                        jnp.asarray(mass)))
+    want = naive_truncated(d2, w, float(mass))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_truncation_properties(seed):
+    rng = np.random.default_rng(seed)
+    n = 40
+    d2 = jnp.asarray(rng.random(n) * 5, jnp.float32)
+    w = jnp.asarray(rng.random(n) + 0.01, jnp.float32)
+    full = float(jnp.sum(w * d2))
+    c0 = float(weighted_truncated_cost(d2, w, jnp.float32(0.0)))
+    c1 = float(weighted_truncated_cost(d2, w, jnp.float32(1.0)))
+    c_all = float(weighted_truncated_cost(d2, w, jnp.sum(w)))
+    np.testing.assert_allclose(c0, full, rtol=1e-4)
+    assert c1 <= c0 + 1e-5, "monotone non-increasing in mass"
+    assert c_all <= 1e-4, "dropping everything leaves zero cost"
+    # top + truncated == total
+    top = float(weighted_top_mass(d2, w, jnp.float32(1.0)))
+    np.testing.assert_allclose(top + c1, full, rtol=1e-3)
+
+
+def test_threshold_scaling():
+    """v scales linearly with the cost level (paper line 9)."""
+    rng = np.random.default_rng(0)
+    d2 = jnp.asarray(rng.random(500), jnp.float32)
+    w = jnp.full((500,), 10.0, jnp.float32)   # HT weights 1/alpha = 10
+    alpha = jnp.float32(0.1)
+    v1 = float(removal_threshold(d2, w, k=5, d_k=6.0, alpha=alpha))
+    v2 = float(removal_threshold(d2 * 3, w, k=5, d_k=6.0, alpha=alpha))
+    np.testing.assert_allclose(v2, 3 * v1, rtol=1e-4)
+    assert v1 >= 0

@@ -1,0 +1,17 @@
+# Reproducible entry points for the test/perf trajectory.
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-all bench-kernels bench
+
+test:            ## tier-1 fast suite (skips @pytest.mark.slow)
+	$(PYTHON) -m pytest -q -m "not slow"
+
+test-all:        ## full tier-1 suite, fail-fast (ROADMAP verify command)
+	$(PYTHON) -m pytest -x -q
+
+bench-kernels:   ## kernel micro-bench + roofline smoke (quick shapes)
+	$(PYTHON) -m benchmarks.run --only kernels --quick
+
+bench:           ## all paper-table benchmarks at full CPU-feasible sizes
+	$(PYTHON) -m benchmarks.run

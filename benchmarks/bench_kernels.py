@@ -2,9 +2,14 @@
 
 Wall time measures the XLA oracle path on this CPU container (the Pallas
 kernels execute only under interpret=True here, which is a correctness
-vehicle, not a performance one). For the TPU target we report the
+vehicle, not a performance one). For the TPU target we report each
 kernel's analytic roofline from its block structure: flops, HBM bytes,
 arithmetic intensity, and the projected v5e-bound time.
+
+The analytic models also record the tentpole claim of the fused-kernel
+layer: one fused assign+reduce sweep moves roughly half the HBM bytes of
+the min_dist + lloyd_reduce pair it replaces (see the ``fused_vs_unfused``
+block in benchmarks/results/kernels.json).
 """
 from __future__ import annotations
 
@@ -16,40 +21,105 @@ from repro.kernels import ops
 from repro.roofline import hw
 
 SHAPES = [(200_000, 128, 16), (200_000, 256, 64), (50_000, 1024, 128)]
+QUICK_N = 20_000  # measured-array cap under --quick (analytic rows keep
+                  # the nominal shapes — they are model, not measurement)
 
 
-def analytic(n, k, d):
-    flops = 2.0 * n * k * d
-    bytes_hbm = 4.0 * (n * d + k * d + 2 * n)      # stream x once, tiny out
+def _roofline(flops: float, bytes_hbm: float):
     t_c = flops / hw.PEAK_FLOPS_BF16
     t_m = bytes_hbm / hw.HBM_BW
-    return flops, bytes_hbm, max(t_c, t_m), ("compute" if t_c > t_m
-                                             else "memory")
+    return max(t_c, t_m), ("compute" if t_c > t_m else "memory")
 
 
-def run():
-    rows = []
+def analytic(kernel: str, n: int, k: int, d: int):
+    """(flops, HBM bytes, roofline seconds, bound) for one kernel sweep.
+
+    Byte counts are f32 words x 4 from each kernel's stream structure:
+      min_dist            reads x, c;            writes d2, idx
+      lloyd_reduce        reads x, w, assign;    writes sums, counts
+      fused_assign_reduce reads x, w, c;         writes sums, counts, cost
+      remove_below        reads x, alive(int8), c; writes alive(int8), live
+    The fused kernels touch x exactly once and keep the (n,) assignment /
+    (n,) distances in VMEM, which is the entire difference from the
+    two-sweep pairs they replace.
+    """
+    if kernel == "min_dist":
+        flops = 2.0 * n * k * d
+        bytes_hbm = 4.0 * (n * d + k * d + 2 * n)
+    elif kernel == "lloyd_reduce":
+        flops = 2.0 * n * k * d
+        bytes_hbm = 4.0 * (n * d + 2 * n + k * d + k)
+    elif kernel == "fused_assign_reduce":
+        flops = 4.0 * n * k * d          # distance matmul + one-hot matmul
+        bytes_hbm = 4.0 * (n * d + n + 2 * k * d + k + 1)
+    elif kernel == "remove_below":
+        flops = 2.0 * n * k * d
+        bytes_hbm = 4.0 * (n * d + k * d) + 2.0 * n  # int8 alive in + out
+    else:
+        raise ValueError(kernel)
+    t, bound = _roofline(flops, bytes_hbm)
+    return flops, bytes_hbm, t, bound
+
+
+def _row(kernel, n, k, d, wall_s, n_meas):
+    flops, byts, t_tpu, bound = analytic(kernel, n, k, d)
+    emit(f"kernel/{kernel}/{n}x{k}x{d}", wall_s * 1e6,
+         gflops_cpu=f"{flops/wall_s/1e9:.1f}",
+         tpu_bound=bound, tpu_roofline_us=f"{t_tpu*1e6:.1f}")
+    # n_meas < n marks cpu_wall_s as linearly extrapolated from a --quick
+    # run — don't compare against full-run timings without checking it
+    return {"kernel": kernel, "n": n, "k": k, "d": d,
+            "cpu_wall_s": wall_s, "n_meas": n_meas,
+            "extrapolated": n_meas < n,
+            "flops": flops, "hbm_bytes": byts,
+            "tpu_bound": bound, "tpu_roofline_s": t_tpu,
+            "intensity_flops_per_byte": flops / byts}
+
+
+def fused_vs_unfused(n, k, d):
+    """Analytic HBM-traffic + roofline comparison, fused vs two-sweep."""
+    _, md_b, md_t, _ = analytic("min_dist", n, k, d)
+    _, lr_b, lr_t, _ = analytic("lloyd_reduce", n, k, d)
+    _, fu_b, fu_t, _ = analytic("fused_assign_reduce", n, k, d)
+    unfused_b, unfused_t = md_b + lr_b, md_t + lr_t
+    return {"n": n, "k": k, "d": d,
+            "unfused_hbm_bytes": unfused_b, "fused_hbm_bytes": fu_b,
+            "hbm_bytes_ratio": fu_b / unfused_b,
+            "unfused_roofline_s": unfused_t, "fused_roofline_s": fu_t,
+            "roofline_speedup": unfused_t / fu_t}
+
+
+def run(quick: bool = False):
+    rows, comparisons = [], []
     for n, k, d in SHAPES:
+        n_meas = min(n, QUICK_N) if quick else n
         rng = np.random.default_rng(0)
-        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(n_meas, d)), jnp.float32)
         c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
-        t, _ = timed(lambda: ops.min_dist(x, c))
-        flops, byts, t_tpu, bound = analytic(n, k, d)
-        rows.append({"kernel": "min_dist", "n": n, "k": k, "d": d,
-                     "cpu_wall_s": t, "flops": flops, "hbm_bytes": byts,
-                     "tpu_bound": bound, "tpu_roofline_s": t_tpu,
-                     "intensity_flops_per_byte": flops / byts})
-        emit(f"kernel/min_dist/{n}x{k}x{d}", t * 1e6,
-             gflops_cpu=f"{flops/t/1e9:.1f}",
-             tpu_bound=bound, tpu_roofline_us=f"{t_tpu*1e6:.1f}")
+        w = jnp.ones((n_meas,), jnp.float32)
+        a = jnp.asarray(rng.integers(0, k, n_meas), jnp.int32)
 
-        w = jnp.ones((n,), jnp.float32)
-        a = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+        t, _ = timed(lambda: ops.min_dist(x, c))
+        rows.append(_row("min_dist", n, k, d, t * n / n_meas, n_meas))
         t, _ = timed(lambda: ops.lloyd_reduce(x, w, a, k))
-        rows.append({"kernel": "lloyd_reduce", "n": n, "k": k, "d": d,
-                     "cpu_wall_s": t})
-        emit(f"kernel/lloyd_reduce/{n}x{k}x{d}", t * 1e6)
-    save_json("kernels", {"rows": rows})
+        rows.append(_row("lloyd_reduce", n, k, d, t * n / n_meas, n_meas))
+        t, _ = timed(lambda: ops.fused_assign_reduce(x, w, c))
+        rows.append(_row("fused_assign_reduce", n, k, d, t * n / n_meas, n_meas))
+
+        m = 8
+        xm = x[: (n_meas // m) * m].reshape(m, -1, d)
+        alive = jnp.ones(xm.shape[:2], bool)
+        v = jnp.float32(float(d))
+        t, _ = timed(lambda: ops.remove_below(xm, c, alive, v))
+        rows.append(_row("remove_below", n, k, d, t * n / n_meas, n_meas))
+
+        cmp = fused_vs_unfused(n, k, d)
+        comparisons.append(cmp)
+        emit(f"kernel/fused_vs_unfused/{n}x{k}x{d}",
+             cmp["fused_roofline_s"] * 1e6,
+             hbm_bytes_ratio=f"{cmp['hbm_bytes_ratio']:.3f}",
+             roofline_speedup=f"{cmp['roofline_speedup']:.2f}x")
+    save_json("kernels", {"rows": rows, "fused_vs_unfused": comparisons})
     return rows
 
 

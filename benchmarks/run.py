@@ -40,7 +40,7 @@ def main() -> None:
         bench_eim11.run(n=min(n3, 24_000))
     if args.only in (None, "kernels"):
         print("# Kernel micro-benchmarks + TPU roofline projection")
-        bench_kernels.run()
+        bench_kernels.run(quick=args.quick)
     print(f"# total benchmark wall time: {time.time()-t0:.0f}s")
 
 

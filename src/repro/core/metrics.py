@@ -38,11 +38,10 @@ def distributed_cost(comm, x: jax.Array, w: jax.Array,
 def assignment_counts(comm, x: jax.Array, w: jax.Array, centers: jax.Array,
                       centers_valid: Optional[jax.Array] = None) -> jax.Array:
     """Per-center total assigned weight of the full dataset (replicated)."""
-    k = centers.shape[0]
 
     def per_machine(xx, ww):
-        _, idx = ops.min_dist(xx, centers, centers_valid)
-        _, counts = ops.lloyd_reduce(xx, ww, idx, k)
+        _, counts, _ = ops.fused_assign_reduce(xx, ww, centers,
+                                               centers_valid)
         return counts
 
     local = jax.vmap(per_machine)(x, w)           # (local_m, k)

@@ -35,8 +35,7 @@ def minibatch_kmeans(key: jax.Array, x: jax.Array, w: jax.Array, k: int,
         idx = jax.random.categorical(kk, logw, shape=(batch,))
         xb = x[idx].astype(jnp.float32)
         wb = jnp.ones((batch,), jnp.float32)
-        _, assign = ops.min_dist(xb, c)
-        sums, counts = ops.lloyd_reduce(xb, wb, assign, k)
+        sums, counts, _ = ops.fused_assign_reduce(xb, wb, c)
         n_c = n_c + counts
         lr = jnp.where(n_c > 0, counts / jnp.maximum(n_c, 1.0), 0.0)
         mean_b = sums / jnp.maximum(counts[:, None], 1e-30)
@@ -46,6 +45,5 @@ def minibatch_kmeans(key: jax.Array, x: jax.Array, w: jax.Array, k: int,
     keys = jax.random.split(kloop, steps)
     (centers, _), _ = lax.scan(step, (centers, jnp.zeros((k,), jnp.float32)),
                                keys)
-    d2, _ = ops.min_dist(x, centers)
-    cost = jnp.sum(w.astype(jnp.float32) * d2)
+    _, _, cost = ops.fused_assign_reduce(x, w, centers)
     return centers.astype(x.dtype), cost

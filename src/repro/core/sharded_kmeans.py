@@ -83,12 +83,11 @@ def distributed_kmeans_pp(key, comm, pts, ws, k: int) -> jax.Array:
 
 def distributed_lloyd(comm, pts, ws, centers, iters: int) -> jax.Array:
     """Weighted Lloyd over sharded points; psum((k,d)+(k,)) per iteration."""
-    k = centers.shape[0]
 
     def step(c, _):
         def per_machine(xx, ww):
-            _, assign = ops.min_dist(xx, c)
-            return ops.lloyd_reduce(xx, ww, assign, k)
+            sums, counts, _ = ops.fused_assign_reduce(xx, ww, c)
+            return sums, counts
 
         sums, counts = jax.vmap(per_machine)(pts, ws)
         sums = comm.psum(sums)
@@ -247,8 +246,7 @@ def distributed_kmeans_parallel_seed(key, comm, pts, ws, k: int,
     centers, valid = cand[:, :d], cand[:, d] > 0
 
     def counts_machine(xx, ww):
-        _, a = ops.min_dist(xx, centers, valid)
-        _, c = ops.lloyd_reduce(xx, ww, a, rows)
+        _, c, _ = ops.fused_assign_reduce(xx, ww, centers, valid)
         return c
 
     counts = comm.psum(jax.vmap(counts_machine)(pts, ws))

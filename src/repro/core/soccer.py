@@ -178,9 +178,10 @@ def soccer_round(state: SoccerState, comm, const: SoccerConstants
         uplink_pts = real1 + real2
 
     # --- broadcast (v, C_iter) is free (replicated); machines remove points
-    d2x = jax.vmap(lambda xx: ops.min_dist(xx, c_iter)[0])(state.x)
-    alive_new = alive_eff & (d2x > v)
-    n_rem = comm.psum(jnp.sum(alive_new, axis=1).astype(jnp.int32))
+    # in ONE fused sweep: min-d2, threshold compare, mask update and live
+    # counts — the (m, p) distance array is never materialized.
+    alive_new, live = ops.remove_below(state.x, c_iter, alive_eff, v)
+    n_rem = comm.psum(live)
 
     # --- bookkeeping
     i = state.round_idx

@@ -1,3 +1,18 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom clustering kernels (Pallas TPU) + their jnp oracles.
+
+Layout:
+  * ``ops.py``         — the public dispatch layer. All algorithm code calls
+    through here; backend selection (``auto`` | ``ref`` | ``pallas``) is
+    controlled by the ``REPRO_KERNEL_BACKEND`` env var or an explicit
+    ``backend=`` argument. Entry points: ``min_dist``, ``lloyd_reduce``,
+    and the one-sweep fused pair ``fused_assign_reduce`` (Lloyd
+    assign+reduce+cost) and ``remove_below`` (SOCCER removal pass).
+  * ``ref.py``         — pure-jnp oracles; the semantics of record and the
+    XLA execution path on non-TPU backends.
+  * ``min_dist.py``, ``lloyd.py``, ``fused_lloyd.py`` — the Pallas kernels.
+  * ``tuning.py``      — the shared (d, k)-keyed block-size autotune table.
+
+Add a kernel here only for compute hot-spots the algorithms actually hit;
+every kernel ships with an oracle in ``ref.py`` and a parity sweep in
+``tests/``.
+"""

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tuning import block_sizes, clamp_bn
+
 
 def _lloyd_kernel(x_ref, w_ref, a_ref, sums_ref, cnt_ref, *, k: int):
     i = pl.program_id(0)
@@ -43,8 +45,8 @@ def lloyd_reduce_pallas(x: jax.Array, w: jax.Array, assign: jax.Array,
                         k: int, *, interpret: bool = False
                         ) -> Tuple[jax.Array, jax.Array]:
     n, d = x.shape
-    bn = 512 if d <= 256 else 256
-    bn = min(bn, max(128, -(-n // 128) * 128))
+    bn, _ = block_sizes(d, k)                 # shared (d, k) autotune table
+    bn = clamp_bn(bn, n)
     n_pad = -n % bn
     xp = jnp.pad(x, ((0, n_pad), (0, 0)))
     wp = jnp.pad(w, (0, n_pad))                      # pad weight 0 -> no-op rows

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tuning import block_sizes, clamp_bn
+
 
 _BIG = 3.0e38  # plain float so the kernel captures no traced constants
 
@@ -55,16 +57,6 @@ def _min_dist_kernel(x_ref, c_ref, cv_ref, d2_ref, idx_ref, *, bk: int):
     d2_ref[...] = jnp.where(better, local_min, prev_min)
 
 
-def _block_sizes(d: int) -> Tuple[int, int]:
-    """Pick (bn, bk) so x/c panels + the (bn,bk) panel fit comfortably in VMEM."""
-    # budget ~4 MiB for the three f32 panels
-    if d <= 128:
-        return 1024, 256
-    if d <= 256:
-        return 512, 256
-    return 256, 128
-
-
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def min_dist_pallas(x: jax.Array, c: jax.Array,
                     c_valid: Optional[jax.Array] = None,
@@ -78,9 +70,9 @@ def min_dist_pallas(x: jax.Array, c: jax.Array,
     else:
         c_valid = c_valid.astype(jnp.int8)
 
-    bn, bk = _block_sizes(d)
-    bn = min(bn, max(128, -(-n // 128) * 128))
-    bk = min(bk, max(128, -(-k // 128) * 128))
+    bn, bk = block_sizes(d, k)                # shared (d, k) autotune table
+    bn = clamp_bn(bn, n)
+    bk = clamp_bn(bk, k)
     n_pad = -n % bn
     k_pad = -k % bk
     xp = jnp.pad(x, ((0, n_pad), (0, 0)))

@@ -1,14 +1,33 @@
 """Jit'd public wrappers over the clustering kernels.
 
-Backend resolution:
+Backend resolution (per call, cheapest check first):
   * ``auto``   — compiled Pallas on TPU; pure-jnp XLA oracle elsewhere
                  (this CPU container). TPU is the TARGET; interpret mode is
                  the validation vehicle.
   * ``ref``    — force the jnp oracle.
   * ``pallas`` — force Pallas (compiled on TPU, interpret=True elsewhere).
 
-The oracle and the kernels agree to float tolerance for every shape/dtype
-in the test sweeps; callers never see which backend ran.
+The default is controlled by the ``REPRO_KERNEL_BACKEND`` environment
+variable (``ref`` | ``pallas``); unset means ``auto``. An explicit
+``backend=`` argument always wins over the environment.
+
+Entry points:
+  * ``min_dist(x, c, c_valid)``            — (n,) min-d2 + argmin sweep.
+  * ``lloyd_reduce(x, w, assign, k)``      — per-center (sums, counts).
+  * ``fused_assign_reduce(x, w, c, c_valid)`` — ONE sweep of ``x`` doing
+    assignment + reduction + weighted cost; replaces the
+    min_dist->lloyd_reduce pair on the Lloyd hot path (~2x less HBM
+    traffic, and the (n,) assignment never round-trips through HBM).
+  * ``remove_below(x, c, alive, v, c_valid)`` — fused SOCCER removal over
+    (m, p, d) machine-sharded points: min-d2, threshold compare, alive-mask
+    update and per-machine live counts in one sweep (the (m, p) distance
+    array is never materialized).
+
+Shape guards: feature dims above ``_MAX_PALLAS_D`` and (for the fused
+kernels, whose center set stays resident in VMEM) center counts above
+``_MAX_PALLAS_K`` fall back to the XLA oracle path. The oracle and the
+kernels agree to float tolerance for every shape/dtype in the test sweeps;
+callers never see which backend ran.
 """
 from __future__ import annotations
 
@@ -19,19 +38,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.fused_lloyd import (fused_assign_reduce_pallas,
+                                       remove_below_pallas)
 from repro.kernels.lloyd import lloyd_reduce_pallas
 from repro.kernels.min_dist import min_dist_pallas
 
-_MAX_PALLAS_D = 512  # larger feature dims fall back to the XLA path
+_MAX_PALLAS_D = 512   # larger feature dims fall back to the XLA path
+_MAX_PALLAS_K = 1024  # fused kernels keep all centers in VMEM; beyond this
+                      # (EIM11-sized center sets) the chunked oracle wins
 
 
 def _backend(explicit: Optional[str]) -> str:
-    if explicit:
-        return explicit
-    env = os.environ.get("REPRO_KERNEL_BACKEND")
-    if env:
-        return env
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+    choice = explicit or os.environ.get("REPRO_KERNEL_BACKEND") or "auto"
+    if choice == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if choice not in ("ref", "pallas"):
+        raise ValueError(
+            f"unknown kernel backend {choice!r} (from "
+            f"{'backend=' if explicit else 'REPRO_KERNEL_BACKEND'}); "
+            "expected 'auto', 'ref' or 'pallas'")
+    return choice
 
 
 def min_dist(x: jax.Array, c: jax.Array,
@@ -55,3 +81,35 @@ def lloyd_reduce(x: jax.Array, w: jax.Array, assign: jax.Array, k: int,
         interpret = jax.default_backend() != "tpu"
         return lloyd_reduce_pallas(x, w, assign, k, interpret=interpret)
     return ref.lloyd_reduce_ref(x, w, assign, k)
+
+
+def fused_assign_reduce(x: jax.Array, w: jax.Array, c: jax.Array,
+                        c_valid: Optional[jax.Array] = None,
+                        *, backend: Optional[str] = None
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-sweep Lloyd step: ((k, d) sums, (k,) counts, () weighted cost).
+
+    Semantics == min_dist followed by lloyd_reduce plus the weighted cost
+    of ``c`` on (x, w); the Pallas path reads ``x`` from HBM once.
+    """
+    b = _backend(backend)
+    if (b == "pallas" and x.shape[-1] <= _MAX_PALLAS_D
+            and c.shape[0] <= _MAX_PALLAS_K):
+        interpret = jax.default_backend() != "tpu"
+        return fused_assign_reduce_pallas(x, w, c, c_valid,
+                                          interpret=interpret)
+    return ref.fused_assign_reduce_ref(x, w, c, c_valid)
+
+
+def remove_below(x: jax.Array, c: jax.Array, alive: jax.Array, v: jax.Array,
+                 c_valid: Optional[jax.Array] = None,
+                 *, backend: Optional[str] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Fused SOCCER removal: ((m, p) bool alive & min-d2 > v, (m,) counts)."""
+    b = _backend(backend)
+    if (b == "pallas" and x.shape[-1] <= _MAX_PALLAS_D
+            and c.shape[0] <= _MAX_PALLAS_K):
+        interpret = jax.default_backend() != "tpu"
+        return remove_below_pallas(x, c, alive, v, c_valid,
+                                   interpret=interpret)
+    return ref.remove_below_ref(x, c, alive, v, c_valid)

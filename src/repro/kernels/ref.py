@@ -98,3 +98,46 @@ def lloyd_reduce_ref(x: jax.Array, w: jax.Array, assign: jax.Array,
     sums = onehot.T @ x.astype(jnp.float32)
     counts = jnp.sum(onehot, axis=0)
     return sums, counts
+
+
+def fused_assign_reduce_ref(x: jax.Array, w: jax.Array, c: jax.Array,
+                            c_valid: Optional[jax.Array] = None
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the one-sweep Lloyd step: assignment + reduction + cost.
+
+    Composes :func:`min_dist_ref` and :func:`lloyd_reduce_ref`; the Pallas
+    kernel fuses both into a single HBM sweep of ``x``.
+
+    Returns:
+      sums:   (k, d) float32 — sum of w_i * x_i per assigned center.
+      counts: (k,)  float32 — sum of w_i per assigned center.
+      cost:   ()    float32 — sum of w_i * min-d2_i (the weighted cost of
+              ``c`` on (x, w), i.e. the pre-update cost of this step).
+    """
+    d2, assign = min_dist_ref(x, c, c_valid)
+    sums, counts = lloyd_reduce_ref(x, w, assign, c.shape[0])
+    cost = jnp.sum(w.astype(jnp.float32) * d2)
+    return sums, counts, cost
+
+
+def remove_below_ref(x: jax.Array, c: jax.Array, alive: jax.Array,
+                     v: jax.Array,
+                     c_valid: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the fused SOCCER removal pass.
+
+    Args:
+      x: (m, p, d) machine-sharded points.
+      c: (k, d) round centers C_iter.
+      alive: (m, p) bool current mask.
+      v: () removal threshold.
+      c_valid: optional (k,) bool mask.
+
+    Returns:
+      alive_new: (m, p) bool — alive & (min_j ||x - c_j||^2 > v).
+      live:      (m,) int32 — per-machine surviving counts.
+    """
+    m, p, d = x.shape
+    d2, _ = min_dist_ref(x.reshape(m * p, d), c, c_valid)
+    alive_new = alive & (d2.reshape(m, p) > v)
+    return alive_new, jnp.sum(alive_new, axis=1).astype(jnp.int32)

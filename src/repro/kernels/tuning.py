@@ -1,0 +1,52 @@
+"""Shared block-size autotune table for the clustering kernels.
+
+One table serves ``min_dist``, ``fused_assign_reduce`` and ``remove_below``
+(and the point-panel size of ``lloyd_reduce``): all four stream (bn, d)
+point panels against a center panel set, so the right block sizes depend
+only on (d, k). Keys are the (d, k) buckets below; values are (bn, bk)
+chosen so the resident f32 panels — x (bn, d), centers (bk, d), the
+(bn, bk) distance panel and, for the fused kernel, the (bk, d) + (bk,)
+accumulators — stay within a ~4 MiB VMEM budget (v5e has 16 MiB less
+double-buffering headroom).
+
+Entries were picked from the analytic VMEM model; on real TPU hardware
+re-measure with ``benchmarks/bench_kernels.py`` and edit the table — every
+kernel picks its sizes up from here.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+_D_BUCKETS = (128, 256, 512)
+_K_BUCKETS = (128, 256, 1024)
+
+# (d_bucket, k_bucket) -> (bn, bk)
+_TABLE = {
+    (128, 128):  (1024, 128),
+    (128, 256):  (1024, 256),
+    (128, 1024): (512, 256),
+    (256, 128):  (512, 128),
+    (256, 256):  (512, 256),
+    (256, 1024): (256, 256),
+    (512, 128):  (256, 128),
+    (512, 256):  (256, 128),
+    (512, 1024): (128, 128),
+}
+
+
+def _bucket(v: int, buckets: Tuple[int, ...]) -> int:
+    for b in buckets:
+        if v <= b:
+            return b
+    return buckets[-1]
+
+
+def block_sizes(d: int, k: int) -> Tuple[int, int]:
+    """(bn, bk) point/center panel sizes for feature dim d and k centers."""
+    return _TABLE[(_bucket(d, _D_BUCKETS), _bucket(k, _K_BUCKETS))]
+
+
+def clamp_bn(bn: int, n: int) -> int:
+    """Shrink bn toward n (rounded up to the 128-sublane tile) so tiny
+    inputs don't pad to a full panel."""
+    return min(bn, max(128, -(-n // 128) * 128))

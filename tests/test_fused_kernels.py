@@ -1,0 +1,158 @@
+"""Fused one-sweep kernels vs their jnp oracles (interpret mode).
+
+Mirrors tests/test_kernels.py: the CPU container executes the Pallas
+bodies via interpret=True; the BlockSpec tiling/grid logic is identical to
+the TPU path. Covers non-multiple-of-128 shapes, k=1, zero-weight rows,
+invalid-center masks, and the d > _MAX_PALLAS_D / k > _MAX_PALLAS_K
+dispatch fallbacks.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.fused_lloyd import (fused_assign_reduce_pallas,
+                                       remove_below_pallas)
+
+SHAPES = [
+    (64, 7, 5),       # tiny, non-aligned everything
+    (300, 37, 17),    # non-multiples of blocks
+    (1024, 128, 15),  # aligned n/k, odd d
+    (513, 200, 64),
+    (128, 1, 3),      # single center
+]
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("n,k,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_assign_reduce_matches_ref(n, k, d, dtype):
+    rng = np.random.default_rng(n * 5 + k + d)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), dtype)
+    s_ref, c_ref, cost_ref = ref.fused_assign_reduce_ref(x, w, c)
+    s_pl, c_pl, cost_pl = fused_assign_reduce_pallas(x, w, c, interpret=True)
+    tol = 1e-3 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(s_pl, s_ref, rtol=tol, atol=tol)
+    np.testing.assert_allclose(c_pl, c_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(cost_pl, cost_ref, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,k,d", SHAPES)
+def test_fused_assign_reduce_zero_weight_rows(n, k, d):
+    """Zero-weight (padding) rows contribute nothing to sums/counts/cost."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    w = w.at[: n // 3].set(0.0)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    s_pl, c_pl, cost_pl = fused_assign_reduce_pallas(x, w, c, interpret=True)
+    s_tr, c_tr, cost_tr = ref.fused_assign_reduce_ref(
+        x[n // 3:], w[n // 3:], c)
+    np.testing.assert_allclose(s_pl, s_tr, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(c_pl, c_tr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(cost_pl, cost_tr, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,k,d", SHAPES)
+def test_fused_assign_reduce_center_mask(n, k, d):
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    valid = jnp.asarray(rng.random(k) > 0.3).at[0].set(True)
+    s_ref, c_ref, cost_ref = ref.fused_assign_reduce_ref(x, w, c, valid)
+    s_pl, c_pl, cost_pl = fused_assign_reduce_pallas(x, w, c, valid,
+                                                     interpret=True)
+    np.testing.assert_allclose(s_pl, s_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(c_pl, c_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(cost_pl, cost_ref, rtol=1e-4, atol=1e-4)
+    # invalid centers receive no mass
+    assert float(jnp.sum(jnp.where(valid, 0.0, c_pl))) == 0.0
+
+
+MP_SHAPES = [
+    (4, 300, 37, 17),
+    (2, 64, 7, 5),
+    (3, 130, 1, 3),    # single center, odd p
+    (5, 513, 200, 64),
+]
+
+
+@pytest.mark.parametrize("m,p,k,d", MP_SHAPES)
+def test_remove_below_matches_ref(m, p, k, d):
+    rng = np.random.default_rng(m + p + k + d)
+    x = jnp.asarray(rng.normal(size=(m, p, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    alive = jnp.asarray(rng.random((m, p)) > 0.25)
+    d2, _ = ref.min_dist_ref(x.reshape(m * p, d), c)
+    # mid-threshold strictly between two d2 values: the kernel and the ref
+    # sum the distance terms in different orders, so a v equal to a data
+    # point's exact d2 could flip its keep bit by 1 ulp
+    d2s = jnp.sort(d2)
+    mid = 0.5 * (d2s[m * p // 2] + d2s[m * p // 2 + 1])
+    for v in [jnp.float32(0.0), mid, jnp.max(d2) + 1.0]:
+        a_ref, l_ref = ref.remove_below_ref(x, c, alive, v)
+        a_pl, l_pl = remove_below_pallas(x, c, alive, v, interpret=True)
+        np.testing.assert_array_equal(np.asarray(a_pl), np.asarray(a_ref))
+        np.testing.assert_array_equal(np.asarray(l_pl), np.asarray(l_ref))
+
+
+def test_remove_below_center_mask_and_dead_stay_dead():
+    rng = np.random.default_rng(9)
+    m, p, k, d = 3, 257, 40, 11
+    x = jnp.asarray(rng.normal(size=(m, p, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    valid = jnp.asarray(rng.random(k) > 0.5).at[0].set(True)
+    alive = jnp.asarray(rng.random((m, p)) > 0.5)
+    v = jnp.float32(float(d) * 0.5)
+    a_ref, l_ref = ref.remove_below_ref(x, c, alive, v, valid)
+    a_pl, l_pl = remove_below_pallas(x, c, alive, v, valid, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a_pl), np.asarray(a_ref))
+    np.testing.assert_array_equal(np.asarray(l_pl), np.asarray(l_ref))
+    assert not bool(jnp.any(a_pl & ~alive))      # removal never resurrects
+
+
+def test_ops_fallback_large_d():
+    """d > _MAX_PALLAS_D must route to the oracle even under backend=pallas."""
+    rng = np.random.default_rng(11)
+    n, k, d = 96, 6, ops._MAX_PALLAS_D + 88
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    s, cnt, cost = ops.fused_assign_reduce(x, w, c, backend="pallas")
+    s_r, cnt_r, cost_r = ref.fused_assign_reduce_ref(x, w, c)
+    np.testing.assert_allclose(s, s_r, rtol=1e-5)
+    np.testing.assert_allclose(cost, cost_r, rtol=1e-5)
+
+    xm = x.reshape(4, -1, d)
+    alive = jnp.ones(xm.shape[:2], bool)
+    v = jnp.float32(1.0)
+    a, l = ops.remove_below(xm, c, alive, v, backend="pallas")
+    a_r, l_r = ref.remove_below_ref(xm, c, alive, v)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(l), np.asarray(l_r))
+
+
+def test_ops_fallback_large_k():
+    """k > _MAX_PALLAS_K (EIM11-sized center sets) routes to the oracle."""
+    rng = np.random.default_rng(12)
+    n, k, d = 64, ops._MAX_PALLAS_K + 32, 7
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    s, cnt, cost = ops.fused_assign_reduce(x, w, c, backend="pallas")
+    s_r, cnt_r, cost_r = ref.fused_assign_reduce_ref(x, w, c)
+    np.testing.assert_allclose(cnt, cnt_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(cost, cost_r, rtol=1e-5)
+
+
+def test_ops_env_backend(monkeypatch):
+    """REPRO_KERNEL_BACKEND=ref forces the oracle; explicit arg wins."""
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "ref")
+    assert ops._backend(None) == "ref"
+    assert ops._backend("pallas") == "pallas"
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND")
+    assert ops._backend(None) in ("ref", "pallas")

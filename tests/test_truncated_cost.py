@@ -1,6 +1,9 @@
 """Weighted l-truncated cost vs a naive oracle + hypothesis properties."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.truncated_cost import (removal_threshold,

@@ -2,9 +2,13 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all bench-kernels bench
+.PHONY: test test-all smoke bench-kernels bench
 
-test:            ## tier-1 fast suite (skips @pytest.mark.slow)
+smoke:           ## quickstart example + one fit() per registered algorithm
+	$(PYTHON) examples/quickstart.py
+	$(PYTHON) -m repro.api.selfcheck
+
+test: smoke      ## tier-1 fast suite (skips @pytest.mark.slow)
 	$(PYTHON) -m pytest -q -m "not slow"
 
 test-all:        ## full tier-1 suite, fail-fast (ROADMAP verify command)

@@ -2,19 +2,16 @@
 
 The paper could not even run EIM11 competitively ("machine running time
 more than a hundred-fold larger"); we quantify the asymmetry: broadcast
-volume and machine-side distance evaluations vs SOCCER.
+volume (points and bytes) and machine-side distance evaluations vs
+SOCCER, both through ``repro.api.fit``.
 """
 from __future__ import annotations
 
-import time
-
 import jax.numpy as jnp
 
-from benchmarks.common import emit, save_json
-from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
-from repro.core.eim11 import run_eim11
-from repro.core.metrics import centralized_cost
-from repro.core.soccer import run_soccer
+from benchmarks.common import emit, save_json, uplink_bytes
+from repro.api import fit
+from repro.configs.soccer_paper import GaussianMixtureSpec
 from repro.data.synthetic import gaussian_mixture, shard_points
 
 M = 8
@@ -25,35 +22,44 @@ def run(n: int = 24_000, k: int = 10):
         GaussianMixtureSpec(n=n, dim=15, k=k, sigma=0.001))
     parts = jnp.asarray(shard_points(x, M))
     xg = jnp.asarray(x)
+    d = parts.shape[-1]
 
-    t0 = time.perf_counter()
-    soc = run_soccer(parts, SoccerParams(k=k, epsilon=0.1, seed=0))
-    t_soc = time.perf_counter() - t0
-    cost_s = float(centralized_cost(xg, jnp.asarray(soc.centers)))
-    bcast_s = soc.rounds * soc.const.k_plus
+    soc = fit(parts, k, algo="soccer", backend="virtual", epsilon=0.1,
+              seed=0)
+    cost_s = soc.cost(xg)
+    const = soc.extra["const"]
+    bcast_s = soc.rounds * const.k_plus
 
-    t0 = time.perf_counter()
-    eim = run_eim11(parts, k=k, epsilon=0.1, max_rounds=8, seed=0)
-    t_eim = time.perf_counter() - t0
-    cost_e = float(centralized_cost(xg, jnp.asarray(eim.centers)))
+    eim = fit(parts, k, algo="eim11", backend="virtual", epsilon=0.1,
+              max_rounds=8, seed=0)
+    cost_e = eim.cost(xg)
+    eim_bcast = eim.extra["broadcast_points"]
 
     # machine distance work: points x broadcast centers per round
-    dist_work_soc = soc.rounds * n * soc.const.k_plus
-    dist_work_eim = sum(int(h) for h in eim.n_hist[:-1]) * \
-        eim.broadcast_points // max(eim.rounds, 1)
+    dist_work_soc = soc.rounds * n * const.k_plus
+    n_hist = eim.n_hist
+    dist_work_eim = sum(int(h) for h in n_hist[:-1]) * \
+        eim_bcast // max(eim.rounds, 1)
 
     payload = {
         "soccer": {"cost": cost_s, "rounds": soc.rounds,
-                   "broadcast_points": int(bcast_s), "time_s": t_soc,
+                   "broadcast_points": int(bcast_s),
+                   "broadcast_bytes": uplink_bytes(bcast_s, d),
+                   "uplink_points": soc.uplink_points_total,
+                   "uplink_bytes": soc.uplink_bytes_total,
+                   "time_s": soc.wall_time_s,
                    "machine_dist_evals": int(dist_work_soc)},
         "eim11": {"cost": cost_e, "rounds": eim.rounds,
-                  "broadcast_points": int(eim.broadcast_points),
-                  "time_s": t_eim,
+                  "broadcast_points": int(eim_bcast),
+                  "broadcast_bytes": uplink_bytes(eim_bcast, d),
+                  "uplink_points": eim.uplink_points_total,
+                  "uplink_bytes": eim.uplink_bytes_total,
+                  "time_s": eim.wall_time_s,
                   "machine_dist_evals": int(dist_work_eim)},
     }
     save_json("eim11", payload)
-    emit("eim11/broadcast_ratio", t_eim * 1e6,
-         eim_over_soccer_broadcast=f"{eim.broadcast_points/max(bcast_s,1):.0f}x",
+    emit("eim11/broadcast_ratio", eim.wall_time_s * 1e6,
+         eim_over_soccer_broadcast=f"{eim_bcast/max(bcast_s,1):.0f}x",
          eim_cost=f"{cost_e:.3g}", soccer_cost=f"{cost_s:.3g}")
     return payload
 

@@ -3,17 +3,15 @@
 Shows the paper's trade-off: the fast black box matches standard k-means
 on benign data (Gaussians) but fails on the KDD-like heavy-tailed set —
 "the importance of using a black box that is suitable for the task".
+Runs SOCCER with both black boxes through ``repro.api.fit``.
 """
 from __future__ import annotations
-
-import time
 
 import jax.numpy as jnp
 
 from benchmarks.common import emit, kdd_like, save_json
-from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
-from repro.core.metrics import centralized_cost
-from repro.core.soccer import run_soccer
+from repro.api import fit
+from repro.configs.soccer_paper import GaussianMixtureSpec
 from repro.data.synthetic import gaussian_mixture, shard_points
 
 M = 8
@@ -27,14 +25,15 @@ def run(n: int = 80_000, k: int = 25):
         parts = jnp.asarray(shard_points(x, M))
         xg = jnp.asarray(x)
         for bb in ("kmeans", "minibatch"):
-            t0 = time.perf_counter()
-            res = run_soccer(parts, SoccerParams(
-                k=k, epsilon=0.1, blackbox=bb, seed=0))
-            dt = time.perf_counter() - t0
-            cost = float(centralized_cost(xg, jnp.asarray(res.centers)))
+            res = fit(parts, k, algo="soccer", backend="virtual",
+                      epsilon=0.1, blackbox=bb, seed=0)
+            cost = res.cost(xg)
             rows.append({"dataset": name, "blackbox": bb, "cost": cost,
-                         "rounds": res.rounds, "time_s": dt})
-            emit(f"minibatch/{name}/{bb}", dt * 1e6,
+                         "rounds": res.rounds,
+                         "time_s": res.wall_time_s,
+                         "uplink": res.uplink_points_total,
+                         "uplink_bytes": res.uplink_bytes_total})
+            emit(f"minibatch/{name}/{bb}", res.wall_time_s * 1e6,
                  cost=f"{cost:.4g}", rounds=res.rounds)
     save_json("minibatch_d2", {"n": n, "k": k, "rows": rows})
     return rows

@@ -1,25 +1,18 @@
 """Paper Table 2: SOCCER (1 round) vs k-means|| (1, 2, 5 rounds).
 
-Per dataset x k: cost, wall time, machine-phase time proxy, rounds,
-|C_out|, uplink points. Machine-phase time = (sampling + removal distance
-pass) wall time / m — the paper's "T (machine)" column; the coordinator
-phase (black-box clustering) is timed separately.
+Per dataset x k: cost, wall time, rounds, |C_out|, uplink points AND
+bytes (dtype-aware). Both algorithms run through the ``repro.api.fit``
+facade, so the comparison is guaranteed to use the same partitioning,
+PRNG convention, and telemetry shape.
 """
 from __future__ import annotations
 
-import functools
-import time
-
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import (census_like, emit, higgs_like, kdd_like,
-                               save_json, timed)
-from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
-from repro.core.kmeans_parallel import run_kmeans_parallel
-from repro.core.metrics import centralized_cost
-from repro.core.soccer import run_soccer
+                               save_json)
+from repro.api import fit
+from repro.configs.soccer_paper import GaussianMixtureSpec
 from repro.data.synthetic import gaussian_mixture, shard_points
 
 M = 8
@@ -43,29 +36,30 @@ def run(n: int = 120_000, ks=(25,), quick: bool = False):
         xg = jnp.asarray(x)
         for k in ks:
             eps = 0.1
-            t0 = time.perf_counter()
-            res = run_soccer(parts, SoccerParams(k=k, epsilon=eps, seed=0))
-            t_soccer = time.perf_counter() - t0
-            cost_s = float(centralized_cost(xg, jnp.asarray(res.centers)))
+            res = fit(parts, k, algo="soccer", backend="virtual",
+                      epsilon=eps, seed=0)
+            cost_s = res.cost(xg)
             row = {"dataset": name, "k": k, "soccer_cost": cost_s,
                    "soccer_rounds": res.rounds,
-                   "soccer_time_s": t_soccer,
+                   "soccer_time_s": res.wall_time_s,
                    "soccer_centers": int(res.centers.shape[0]),
-                   "soccer_uplink": int(res.uplink.sum()),
-                   "eta": res.const.eta}
+                   "soccer_uplink": res.uplink_points_total,
+                   "soccer_uplink_bytes": res.uplink_bytes_total,
+                   "eta": res.extra["const"].eta}
             for r in ((1,) if quick else (1, 2, 5)):
-                t0 = time.perf_counter()
-                kp = run_kmeans_parallel(parts, k=k, rounds=r, seed=0)
-                t_kp = time.perf_counter() - t0
-                cost_kp = float(centralized_cost(
-                    xg, jnp.asarray(kp.centers)))
+                kp = fit(parts, k, algo="kmeans_parallel",
+                         backend="virtual", rounds=r, seed=0)
+                cost_kp = kp.cost(xg)
                 row[f"kmeans_par_{r}r_cost"] = cost_kp
-                row[f"kmeans_par_{r}r_time_s"] = t_kp
+                row[f"kmeans_par_{r}r_time_s"] = kp.wall_time_s
                 row[f"kmeans_par_{r}r_ratio"] = cost_kp / max(cost_s, 1e-30)
+                row[f"kmeans_par_{r}r_uplink"] = kp.uplink_points_total
+                row[f"kmeans_par_{r}r_uplink_bytes"] = kp.uplink_bytes_total
             rows.append(row)
             emit(f"table2/{name}/k{k}", row["soccer_time_s"] * 1e6,
                  soccer_cost=f"{cost_s:.3g}",
                  rounds=res.rounds,
+                 uplink_mb=f"{res.uplink_bytes_total/1e6:.2f}",
                  kmeanspar_1r_ratio=f"{row['kmeans_par_1r_cost']/max(cost_s,1e-30):.2f}")
     save_json("table2", {"n": n, "rows": rows})
     return rows

@@ -1,17 +1,14 @@
 """Paper Table 3: tiny coordinator (eps=0.01) -> multi-round SOCCER, vs
 k-means|| run until it matches SOCCER's cost (its hidden hyper-parameter).
+Both sides go through ``repro.api.fit``.
 """
 from __future__ import annotations
 
-import time
-
 import jax.numpy as jnp
 
-from benchmarks.common import emit, higgs_like, save_json
-from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
-from repro.core.kmeans_parallel import run_kmeans_parallel
-from repro.core.metrics import centralized_cost
-from repro.core.soccer import run_soccer
+from benchmarks.common import emit, save_json
+from repro.api import fit
+from repro.configs.soccer_paper import GaussianMixtureSpec
 from repro.data.synthetic import gaussian_mixture, shard_points
 
 M = 8
@@ -34,32 +31,35 @@ def run(n: int = 60_000, k: int = 25, eta: int = 7000,
     for name, x in (("Gau", gau), ("KDD~", kdd_like(n))):
         parts = jnp.asarray(shard_points(x, M))
         xg = jnp.asarray(x)
-        t0 = time.perf_counter()
-        res = run_soccer(parts, SoccerParams(k=k, epsilon=epsilon,
-                                             max_rounds=40, seed=0),
-                         eta_override=eta)
-        t_s = time.perf_counter() - t0
-        cost_s = float(centralized_cost(xg, jnp.asarray(res.centers)))
+        res = fit(parts, k, algo="soccer", backend="virtual",
+                  epsilon=epsilon, max_rounds=40, eta_override=eta, seed=0)
+        cost_s = res.cost(xg)
 
         # k-means||: grow rounds until within 2% of SOCCER's cost
         matched, t_kp, cost_kp = None, 0.0, float("inf")
+        kp_up, kp_up_b = 0, 0
         for r in range(1, max_par_rounds + 1):
-            t0 = time.perf_counter()
-            kp = run_kmeans_parallel(parts, k=k, rounds=r, seed=0)
-            t_kp = time.perf_counter() - t0
-            cost_kp = float(centralized_cost(xg, jnp.asarray(kp.centers)))
+            kp = fit(parts, k, algo="kmeans_parallel", backend="virtual",
+                     rounds=r, seed=0)
+            t_kp, cost_kp = kp.wall_time_s, kp.cost(xg)
+            kp_up, kp_up_b = kp.uplink_points_total, kp.uplink_bytes_total
             if cost_kp <= 1.02 * cost_s:
                 matched = r
                 break
-        rows.append({"dataset": name, "k": k, "eta": res.const.eta,
+        rows.append({"dataset": name, "k": k,
+                     "eta": res.extra["const"].eta,
                      "soccer_rounds": res.rounds, "soccer_cost": cost_s,
-                     "soccer_time_s": t_s,
+                     "soccer_time_s": res.wall_time_s,
+                     "soccer_uplink": res.uplink_points_total,
+                     "soccer_uplink_bytes": res.uplink_bytes_total,
                      "kmeans_par_rounds_to_match": matched,
                      "kmeans_par_cost": cost_kp,
                      "kmeans_par_time_s": t_kp,
+                     "kmeans_par_uplink": kp_up,
+                     "kmeans_par_uplink_bytes": kp_up_b,
                      "n_hist": [int(v) for v in
                                 res.n_hist[: res.rounds + 1]]})
-        emit(f"table3/{name}/k{k}", t_s * 1e6,
+        emit(f"table3/{name}/k{k}", res.wall_time_s * 1e6,
              soccer_rounds=res.rounds,
              n_hist="->".join(str(int(v)) for v in
                               res.n_hist[: res.rounds + 1]),

@@ -19,6 +19,14 @@ import numpy as np
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 
+def uplink_bytes(points, d: int, dtype=np.float32) -> int:
+    """Upload volume of ``points`` d-dim rows in bytes (dtype-aware, so
+    the paper's communication comparison stays meaningful for future
+    reduced-precision upload paths)."""
+    from repro.api.result import uplink_bytes as _ub
+    return int(np.sum(_ub(points, d, dtype)))
+
+
 def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw):
     """Median wall time (s) of fn(*args) with block_until_ready."""
     for _ in range(warmup):

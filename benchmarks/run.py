@@ -1,9 +1,12 @@
 """Benchmark harness — one function per paper table.
 
 Prints ``name,us_per_call,derived`` CSV lines and writes JSON to
-benchmarks/results/. Sizes are scaled to this CPU container (the paper's
-10M-point runs are hardware-gated); every ratio (eps, delta, k, Zipf,
-sigma) follows the paper. Run:  PYTHONPATH=src python -m benchmarks.run
+benchmarks/results/. All clustering tables run through the
+``repro.api.fit`` facade and record uplink in points AND bytes
+(``benchmarks.common.uplink_bytes``, dtype-aware). Sizes are scaled to
+this CPU container (the paper's 10M-point runs are hardware-gated);
+every ratio (eps, delta, k, Zipf, sigma) follows the paper.
+Run:  PYTHONPATH=src python -m benchmarks.run
 """
 from __future__ import annotations
 

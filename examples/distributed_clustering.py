@@ -1,26 +1,27 @@
-"""Production-shaped SOCCER run: mesh deployment, checkpointing, machine
-failure + straggler handling, baseline comparison, final k-reduction.
+"""Production-shaped SOCCER run through the facade: per-round
+checkpointing and machine-failure injection via the ``on_round`` hook,
+straggler handling, baseline comparison, final k-reduction.
 
     PYTHONPATH=src python examples/distributed_clustering.py [--machines 8]
 
-On a multi-device system (or with XLA_FLAGS=--xla_force_host_platform_
-device_count=8) the run uses a real shard_map mesh; on one device it uses
-the VirtualCluster (identical math, same code path).
+This run pins ``backend="virtual"`` because the ``on_round`` hook below
+mutates host-side state (``fail_machines`` edits the machine_ok mask as
+a numpy array); plain ``fit(..., backend="auto")`` without such a hook
+runs the identical driver loop on a real shard_map mesh when the host
+has one device per machine.
 """
 import argparse
-import functools
 import tempfile
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import fit
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
+from repro.configs.soccer_paper import GaussianMixtureSpec
 from repro.core.comm import VirtualCluster
-from repro.core.kmeans_parallel import run_kmeans_parallel
 from repro.core.metrics import centralized_cost
 from repro.core.reduce import weighted_reduce
-from repro.core import soccer as S
 from repro.data.synthetic import gaussian_mixture, shard_points
 from repro.ft.failures import fail_machines, surviving_fraction
 
@@ -39,42 +40,37 @@ def main():
     parts = jnp.asarray(shard_points(x, args.machines))
     xg = jnp.asarray(x)
 
-    params = SoccerParams(k=args.k, epsilon=0.05, straggler_rate=0.1,
-                          max_rounds=25)
-    const = S.derive_constants(args.n, parts.shape[1], params,
-                               eta_override=6000)   # small coordinator -> multiple rounds
-    comm = VirtualCluster(args.machines)
-    state = S.init_state(parts, const, jax.random.PRNGKey(0))
-    step = jax.jit(functools.partial(S.soccer_round, comm=comm,
-                                     const=const))
-
     ckpt = Checkpointer(tempfile.mkdtemp(prefix="soccer_ckpt_"))
-    rounds, prev_n = 0, int(state.n_remaining)
-    while rounds < const.max_rounds and int(state.n_remaining) > const.eta:
-        state = step(state)
-        rounds += 1
-        ckpt.save(rounds, state)          # async, atomic, keep-3
-        print(f"round {rounds}: N={int(state.n_remaining)} "
-              f"v={float(state.v_hist[rounds-1]):.3g}")
-        if rounds == 1 and args.fail:
+
+    def on_round(r, state):
+        """Host hook after every round: checkpoint, then inject failures."""
+        ckpt.save(r, state)               # async, atomic, keep-3
+        print(f"round {r}: N={int(state.n_remaining)} "
+              f"v={float(state.v_hist[r-1]):.3g}")
+        if r == 1 and args.fail:
             state = fail_machines(state, args.fail)
             print(f"  !! killed machines {args.fail} "
                   f"(surviving data: {surviving_fraction(state):.0%})")
-        if int(state.n_remaining) >= prev_n:
-            print("  (no-progress guard: finalizing on a subsample)")
-            break
-        prev_n = int(state.n_remaining)
-    ckpt.wait()
-    state = S.soccer_finalize(state, comm, const)
-    centers = S.flatten_centers(state)
-    print(f"finished in {rounds} rounds, |C_out|={centers.shape[0]}")
+        return state
 
-    final_k = weighted_reduce(jax.random.PRNGKey(1), comm, state.x,
-                              state.w, jnp.asarray(centers), k=args.k)
+    res = fit(parts, k=args.k, algo="soccer", backend="virtual",
+              epsilon=0.05, straggler_rate=0.1, max_rounds=25,
+              eta_override=6000,          # small coordinator -> multi-round
+              on_round=on_round, seed=0)
+    ckpt.wait()
+    print(f"finished in {res.rounds} rounds, |C_out|={res.centers.shape[0]}, "
+          f"uplink={res.uplink_points_total} pts "
+          f"({res.uplink_bytes_total/1e6:.1f} MB)")
+
+    state = res.extra["state"]
+    final_k = weighted_reduce(jax.random.PRNGKey(1),
+                              VirtualCluster(args.machines), state.x,
+                              state.w, jnp.asarray(res.centers), k=args.k)
     cost = float(centralized_cost(xg, final_k))
     opt = float(centralized_cost(xg, jnp.asarray(means)))
-    kp = run_kmeans_parallel(parts, k=args.k, rounds=rounds)
-    kp_cost = float(centralized_cost(xg, jnp.asarray(kp.centers)))
+    kp = fit(parts, k=args.k, algo="kmeans_parallel",
+             backend="virtual", rounds=max(res.rounds, 1), seed=0)
+    kp_cost = kp.cost(xg)
     print(f"SOCCER cost (k centers, after failures): {cost:.4f} "
           f"({cost/opt:.2f}x optimal)")
     print(f"k-means|| with the same rounds:          {kp_cost:.4f} "

@@ -1,16 +1,15 @@
 """SOCCER as a first-class feature of the LM stack: cluster a model's
 token-embedding space across the data-parallel axis (e.g. for codebook /
-prototype construction) with the same round machinery used for raw data.
+prototype construction) through the same ``fit()`` facade used for raw
+data.
 
     PYTHONPATH=src python examples/embedding_clustering.py
 """
 import jax
 import jax.numpy as jnp
 
+from repro.api import fit
 from repro.configs import get_config
-from repro.configs.soccer_paper import SoccerParams
-from repro.core.metrics import centralized_cost
-from repro.core.soccer import run_soccer
 from repro.models.model import init_lm
 
 
@@ -18,15 +17,13 @@ def main(arch: str = "qwen2-1.5b", k: int = 16, m: int = 8):
     cfg = get_config(arch).reduced()
     params = init_lm(jax.random.PRNGKey(0), cfg)
     emb = params["embed"]["embedding"]               # (V, d)
-    v = (emb.shape[0] // m) * m
-    parts = emb[:v].reshape(m, v // m, emb.shape[1]).astype(jnp.float32)
+    x = jnp.asarray(emb, jnp.float32)
 
-    res = run_soccer(parts, SoccerParams(k=k, epsilon=0.2, seed=0))
-    cost = float(centralized_cost(emb[:v].astype(jnp.float32),
-                                  jnp.asarray(res.centers)))
-    print(f"clustered {v} '{arch}' token embeddings (d={emb.shape[1]}) "
-          f"into {res.centers.shape[0]} prototypes "
-          f"in {res.rounds} round(s); cost={cost:.4f}")
+    res = fit(x, k=k, algo="soccer", backend="virtual", m=m, epsilon=0.2,
+              seed=0)
+    print(f"clustered {x.shape[0]} '{arch}' token embeddings "
+          f"(d={emb.shape[1]}) into {res.centers.shape[0]} prototypes "
+          f"in {res.rounds} round(s); cost={res.cost(x):.4f}")
 
 
 if __name__ == "__main__":

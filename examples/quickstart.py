@@ -1,13 +1,13 @@
-"""Quickstart: distributed k-means with SOCCER in ~20 lines.
+"""Quickstart: distributed k-means through the unified API in ~15 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
-from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
+from repro.api import fit
+from repro.configs.soccer_paper import GaussianMixtureSpec
 from repro.core.metrics import centralized_cost
-from repro.core.soccer import run_soccer
-from repro.data.synthetic import gaussian_mixture, shard_points
+from repro.data.synthetic import gaussian_mixture
 
 
 def main():
@@ -16,18 +16,19 @@ def main():
     x, _, means = gaussian_mixture(spec)
 
     # partition across 8 "machines" and run SOCCER
-    parts = jnp.asarray(shard_points(x, m=8))
-    result = run_soccer(parts, SoccerParams(k=25, epsilon=0.1))
+    result = fit(x, k=25, algo="soccer", backend="auto", m=8, epsilon=0.1)
 
-    cost = float(centralized_cost(jnp.asarray(x),
-                                  jnp.asarray(result.centers)))
+    const = result.extra["const"]
+    cost = result.cost(x)
     opt = float(centralized_cost(jnp.asarray(x), jnp.asarray(means)))
+    print(f"backend:            {result.backend}")
     print(f"rounds used:        {result.rounds} "
-          f"(worst case {result.const.max_rounds})")
+          f"(worst case {const.max_rounds})")
     print(f"centers selected:   {result.centers.shape[0]} "
-          f"(k_plus={result.const.k_plus})")
-    print(f"points uploaded:    {int(result.uplink.sum())} "
-          f"(coordinator capacity eta={result.const.eta})")
+          f"(k_plus={const.k_plus})")
+    print(f"points uploaded:    {result.uplink_points_total} "
+          f"({result.uplink_bytes_total/1e6:.1f} MB; "
+          f"coordinator capacity eta={const.eta})")
     print(f"k-means cost:       {cost:.4f}  (optimal ~{opt:.4f}, "
           f"ratio {cost/opt:.2f}x)")
 

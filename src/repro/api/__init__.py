@@ -1,0 +1,26 @@
+"""Unified clustering API: ``fit()`` over every algorithm and backend.
+
+    from repro.api import fit, list_algorithms
+    res = fit(x, k=25)                          # SOCCER, auto backend
+    res = fit(x, k=25, algo="kmeans_parallel", rounds=5)
+    res.centers, res.rounds, res.uplink_points, res.uplink_bytes,
+    res.cost(x)
+
+Algorithms register drivers in ``repro.api.registry``; backends
+(virtual single-device, mesh shard_map) implement the ``Backend``
+protocol in ``repro.api.backends``.
+"""
+from repro.api.backends import (Backend, CommBackend, MeshBackend,
+                                VirtualBackend, resolve_backend)
+from repro.api.registry import (get_algorithm, list_algorithms,
+                                register_algorithm)
+from repro.api.result import ClusterResult, uplink_bytes
+from repro.api.facade import fit
+from repro.api import algorithms as _algorithms  # noqa: F401  (registers
+                                                 # the built-in drivers)
+
+__all__ = [
+    "Backend", "ClusterResult", "CommBackend", "MeshBackend",
+    "VirtualBackend", "fit", "get_algorithm", "list_algorithms",
+    "register_algorithm", "resolve_backend", "uplink_bytes",
+]

@@ -1,0 +1,151 @@
+"""Built-in algorithm drivers for ``repro.api.fit``.
+
+Each driver adapts one core implementation to the registry contract
+(``(x_parts, k, *, backend, key, w, alive, seed, **params) ->
+ClusterResult``) and normalizes its telemetry: per-round uplink in points
+*and* bytes, live-count / threshold histories where the algorithm has
+them, and the raw core result under ``extra["raw"]`` for callers that
+need algorithm-specific detail (SOCCER constants, k-means‖ oversampled
+set, EIM11 broadcast volume, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import register_algorithm
+from repro.api.result import ClusterResult, uplink_bytes
+from repro.configs.soccer_paper import SoccerParams
+from repro.core.eim11 import run_eim11
+from repro.core.kmeans import kmeans
+from repro.core.kmeans_parallel import run_kmeans_parallel
+from repro.core.minibatch import minibatch_kmeans
+from repro.core.soccer import run_soccer
+
+_SOCCER_FIELDS = {f.name for f in dataclasses.fields(SoccerParams)}
+
+
+def _reject_unknown(algo: str, params: dict, allowed: set):
+    unknown = sorted(set(params) - allowed)
+    if unknown:
+        raise TypeError(
+            f"fit(algo={algo!r}) got unexpected parameter(s) "
+            f"{', '.join(unknown)}; allowed: {', '.join(sorted(allowed))}")
+
+
+@register_algorithm("soccer")
+def fit_soccer(x_parts, k: int, *, backend, key=None, w=None, alive=None,
+               seed: int = 0, eta_override: int = 0, on_round=None,
+               **params) -> ClusterResult:
+    """SOCCER (the paper's Algorithm 1) via the unified host driver."""
+    _reject_unknown("soccer", params,
+                    _SOCCER_FIELDS - {"k", "seed", "n_machines"})
+    m, _, d = x_parts.shape
+    sp = SoccerParams(k=k, seed=seed, n_machines=m, **params)
+    res = run_soccer(x_parts, sp, backend=backend, key=key, w=w,
+                     alive=alive, eta_override=eta_override,
+                     on_round=on_round)
+    up = res.uplink[: res.rounds + 1]
+    return ClusterResult(
+        centers=res.centers, k=k, algo="soccer", backend=backend.name,
+        rounds=res.rounds, uplink_points=np.asarray(up, np.int64),
+        uplink_bytes=uplink_bytes(up, d),
+        n_hist=res.n_hist[: res.rounds + 1],
+        v_hist=res.v_hist[: res.rounds],
+        extra={"const": res.const, "state": res.state, "raw": res})
+
+
+@register_algorithm("kmeans_parallel")
+def fit_kmeans_parallel(x_parts, k: int, *, backend, key=None, w=None,
+                        alive=None, seed: int = 0, rounds: int = 5,
+                        l: Optional[float] = None, lloyd_iters: int = 25,
+                        oversample_slack: float = 3.0) -> ClusterResult:
+    """k-means‖ (Bahmani et al.) — fixed-round oversampling baseline."""
+    m, p, d = x_parts.shape
+    if alive is not None:   # dead/padding points are weight-0 for k-means‖
+        w = jnp.ones((m, p), jnp.float32) if w is None else jnp.asarray(
+            w, jnp.float32)
+        w = w * jnp.asarray(alive, jnp.float32)
+    res = run_kmeans_parallel(x_parts, k, rounds, l=l, w=w, backend=backend,
+                              key=key, lloyd_iters=lloyd_iters,
+                              oversample_slack=oversample_slack, seed=seed)
+    sel = list(res.selected_hist)
+    up = np.asarray([1 + sel[0]] + sel[1:] if sel else [1], np.int64)
+    return ClusterResult(
+        centers=res.centers, k=k, algo="kmeans_parallel",
+        backend=backend.name, rounds=res.rounds, uplink_points=up,
+        uplink_bytes=uplink_bytes(up, d),
+        extra={"phi_hist": res.phi_hist, "oversampled": res.oversampled,
+               "raw": res})
+
+
+@register_algorithm("eim11")
+def fit_eim11(x_parts, k: int, *, backend, key=None, w=None, alive=None,
+              seed: int = 0, epsilon: float = 0.1, delta: float = 0.1,
+              remove_frac: float = 0.5, max_rounds: int = 12
+              ) -> ClusterResult:
+    """EIM11 (Ene, Im, Moseley 2011) — sample-everything baseline."""
+    d = x_parts.shape[-1]
+    res = run_eim11(x_parts, k, epsilon, delta=delta,
+                    remove_frac=remove_frac, w=w, alive=alive,
+                    backend=backend, key=key, max_rounds=max_rounds,
+                    seed=seed)
+    return ClusterResult(
+        centers=res.centers, k=k, algo="eim11", backend=backend.name,
+        rounds=res.rounds, uplink_points=np.asarray(res.uplink, np.int64),
+        uplink_bytes=uplink_bytes(res.uplink, d), n_hist=res.n_hist,
+        extra={"broadcast_points": res.broadcast_points, "raw": res})
+
+
+def _fit_central(method: str, x_parts, k, backend, key, w, alive, seed,
+                 **bb_kw) -> ClusterResult:
+    """Centralized baseline: every machine uploads its full shard once,
+    the coordinator runs the black box on the union."""
+    m, p, d = x_parts.shape
+    comm = backend.make_comm(m)
+    x = backend.put(jnp.asarray(x_parts, jnp.float32), "machine")
+    w_np = np.ones((m, p), np.float32) if w is None else np.asarray(
+        w, np.float32)
+    if alive is not None:
+        w_np = np.where(np.asarray(alive), w_np, 0.0).astype(np.float32)
+    w_dev = backend.put(jnp.asarray(w_np), "machine")
+    key = jax.random.PRNGKey(seed) if key is None else key
+
+    def central(kk, xp, wp):
+        xa = comm.all_machines(xp).reshape(-1, d)
+        wa = comm.all_machines(wp).reshape(-1)
+        if method == "minibatch":
+            return minibatch_kmeans(kk, xa, wa, k, **bb_kw)
+        return kmeans(kk, xa, wa, k, **bb_kw)
+
+    fn = backend.compile(central, ("rep", "machine", "machine"),
+                         ("rep", "rep"))
+    centers, cost = fn(key, x, w_dev)
+    n_up = int(np.sum(w_np > 0))
+    up = np.asarray([n_up], np.int64)
+    return ClusterResult(
+        centers=np.asarray(centers), k=k, algo=method,
+        backend=backend.name, rounds=1, uplink_points=up,
+        uplink_bytes=uplink_bytes(up, d),
+        extra={"blackbox_cost": float(cost)})
+
+
+@register_algorithm("lloyd")
+def fit_lloyd(x_parts, k: int, *, backend, key=None, w=None, alive=None,
+              seed: int = 0, iters: int = 25) -> ClusterResult:
+    """Centralized k-means++ + Lloyd (gather everything, cluster once)."""
+    return _fit_central("lloyd", x_parts, k, backend, key, w, alive, seed,
+                        iters=iters)
+
+
+@register_algorithm("minibatch")
+def fit_minibatch(x_parts, k: int, *, backend, key=None, w=None, alive=None,
+                  seed: int = 0, batch: int = 1024, steps: int = 60
+                  ) -> ClusterResult:
+    """Centralized mini-batch k-means (the paper's D.2 fast black box)."""
+    return _fit_central("minibatch", x_parts, k, backend, key, w, alive,
+                        seed, batch=batch, steps=steps)

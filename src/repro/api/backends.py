@@ -1,0 +1,172 @@
+"""Execution backends for the ``repro.api`` facade.
+
+A *backend* decides where the machine axis of a ``(m, p, ...)`` array
+lives; the algorithm drivers in ``repro.core`` are written once against
+the comm abstraction (``repro.core.comm``) and bound to a backend:
+
+* ``VirtualBackend`` — all ``m`` machines folded into axis 0 on one
+  device (``VirtualCluster``); compiled functions are plain ``jax.jit``.
+* ``MeshBackend``   — one machine per shard of a device mesh
+  (``MeshCluster``); compiled functions are ``jit(shard_map(...))`` over
+  the mesh's machine axes.
+
+Drivers describe each compiled function's arguments/results with a
+*marks* pytree whose leaves are ``MACHINE`` (leading machine axis,
+sharded on a mesh) or ``REPLICATED`` (identical on every machine). The
+backend translates marks into PartitionSpecs (mesh) or ignores them
+(virtual) — the same driver loop then runs unchanged in both modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.comm import MeshCluster, VirtualCluster
+
+# Marks for the leaves of compiled-function argument/result pytrees.
+MACHINE = "machine"        # (local_m, ...) leading machine axis
+REPLICATED = "rep"         # identical value on every machine
+
+
+def _shard_map(fn, mesh: Mesh, in_specs, out_specs):
+    """Version-compat shard_map (jax.shard_map vs jax.experimental)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def mesh_comm(mesh: Mesh, axis_names: Optional[Tuple[str, ...]] = None
+              ) -> MeshCluster:
+    """MeshCluster over the given mesh axes (all axes by default)."""
+    axis_names = tuple(axis_names or mesh.axis_names)
+    sizes = tuple(int(mesh.shape[a]) for a in axis_names)
+    return MeshCluster(m=int(np.prod(sizes)), axis_names=axis_names,
+                       axis_sizes=sizes)
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """What a driver needs: a comm, data placement, and compilation."""
+    name: str
+
+    def make_comm(self, m: int):
+        """Comm object for ``m`` machines (VirtualCluster/MeshCluster)."""
+
+    def put(self, tree: Any, marks: Any) -> Any:
+        """Place a pytree according to its marks (device_put on a mesh)."""
+
+    def compile(self, fn, in_marks: Tuple, out_marks: Any):
+        """Compile ``fn(*args)``; marks mirror the args/result pytrees."""
+
+
+@dataclasses.dataclass(frozen=True)
+class VirtualBackend:
+    """Single-device execution: machine axis is a plain array axis."""
+    name: str = "virtual"
+
+    def make_comm(self, m: int) -> VirtualCluster:
+        return VirtualCluster(m)
+
+    def put(self, tree, marks):
+        del marks
+        return tree
+
+    def compile(self, fn, in_marks, out_marks):
+        del in_marks, out_marks
+        return jax.jit(fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommBackend:
+    """Legacy adapter: run with a caller-supplied comm object, plain jit.
+
+    Kept so the pre-facade ``comm=`` keyword of the core drivers keeps
+    working; new code should pass a backend instead.
+    """
+    comm: Any
+    name: str = "virtual"
+
+    def make_comm(self, m: int):
+        return self.comm
+
+    def put(self, tree, marks):
+        del marks
+        return tree
+
+    def compile(self, fn, in_marks, out_marks):
+        del in_marks, out_marks
+        return jax.jit(fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshBackend:
+    """One machine per shard of ``mesh``'s ``axis_names`` axes."""
+    mesh: Mesh
+    axis_names: Optional[Tuple[str, ...]] = None
+    name: str = "mesh"
+
+    @property
+    def machine_axes(self) -> Tuple[str, ...]:
+        return tuple(self.axis_names or self.mesh.axis_names)
+
+    def make_comm(self, m: int) -> MeshCluster:
+        comm = mesh_comm(self.mesh, self.machine_axes)
+        if comm.m != m:
+            raise ValueError(
+                f"mesh backend has {comm.m} machine shards over axes "
+                f"{self.machine_axes} but the data has m={m} machines")
+        return comm
+
+    def _spec(self, mark: str) -> P:
+        return P(self.machine_axes) if mark == MACHINE else P()
+
+    def _specs(self, marks):
+        return jax.tree.map(self._spec, marks)
+
+    def put(self, tree, marks):
+        return jax.tree.map(
+            lambda leaf, mk: jax.device_put(
+                leaf, NamedSharding(self.mesh, self._spec(mk))),
+            tree, marks)
+
+    def compile(self, fn, in_marks, out_marks):
+        mapped = _shard_map(fn, self.mesh, in_specs=self._specs(in_marks),
+                            out_specs=self._specs(out_marks))
+        return jax.jit(mapped)
+
+
+def resolve_backend(backend, m: int) -> Backend:
+    """Accepts a Backend, a Mesh, or "virtual" | "mesh" | "auto".
+
+    "auto" picks the mesh backend when the host has at least ``m``
+    addressable devices (one machine per device), else the virtual one.
+    """
+    if backend is None:
+        backend = "virtual"
+    if isinstance(backend, Mesh):
+        return MeshBackend(backend)
+    if not isinstance(backend, str):
+        return backend  # already a Backend (duck-typed)
+    if backend == "auto":
+        backend = "mesh" if (m > 1 and jax.device_count() >= m) else "virtual"
+    if backend == "virtual":
+        return VirtualBackend()
+    if backend == "mesh":
+        if jax.device_count() < m:
+            raise ValueError(
+                f"backend='mesh' needs >= {m} devices (one per machine), "
+                f"got {jax.device_count()}; use backend='virtual' or fewer "
+                f"machines")
+        devs = np.asarray(jax.devices()[:m]).reshape(m)
+        return MeshBackend(Mesh(devs, ("machines",)))
+    raise ValueError(
+        f"unknown backend {backend!r}: expected 'virtual', 'mesh', 'auto', "
+        f"a jax Mesh, or a Backend instance")

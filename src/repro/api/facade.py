@@ -1,0 +1,93 @@
+"""``repro.api.fit`` — one front end over every algorithm and backend.
+
+    from repro.api import fit
+    res = fit(x, k=25, algo="soccer", backend="auto", epsilon=0.1)
+    res.centers, res.rounds, res.uplink_points, res.cost(x)
+
+``x`` is either flat ``(n, d)`` data (partitioned across ``m`` machines
+here, padding the last shard with dead points when ``m`` does not divide
+``n``) or pre-sharded ``(m, p, d)`` — the latter is passed through
+untouched, so facade runs are bit-identical to the legacy per-algorithm
+drivers for the same PRNG key.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.api.backends import resolve_backend
+from repro.api.registry import get_algorithm
+from repro.api.result import ClusterResult
+
+
+def _as_parts(x: np.ndarray, w, m: int, seed: int, shuffle: bool):
+    """(n, d) -> ((m, p, d), (m, p) weights, (m, p) alive); 3-d passthrough."""
+    if x.ndim == 3:
+        return x, w, None
+    n, d = x.shape
+    w_flat = np.ones((n,), np.float32) if w is None else np.asarray(
+        w, np.float32)
+    idx = np.arange(n)
+    if shuffle:  # balanced shards irrespective of data order (cf. shard_points)
+        np.random.default_rng(seed).shuffle(idx)
+    p = -(-n // m)
+    pad = m * p - n
+    xs = np.concatenate(
+        [np.asarray(x, np.float32)[idx],
+         np.zeros((pad, d), np.float32)]).reshape(m, p, d)
+    ws = np.concatenate(
+        [w_flat[idx], np.zeros((pad,), np.float32)]).reshape(m, p)
+    alive = np.concatenate(
+        [np.ones((n,), bool), np.zeros((pad,), bool)]).reshape(m, p)
+    return xs, ws, alive
+
+
+def fit(x, k: int, algo: str = "soccer", backend="auto", *,
+        m: Optional[int] = None, w=None, key: Optional[jax.Array] = None,
+        seed: int = 0, shuffle: bool = True, **algo_params) -> ClusterResult:
+    """Cluster ``x`` into ``k`` groups with any registered algorithm.
+
+    Args:
+      x: ``(n, d)`` points or ``(m, p, d)`` machine-sharded points.
+      k: number of clusters.
+      algo: registered algorithm name (``repro.api.list_algorithms()``).
+      backend: "virtual" | "mesh" | "auto", a ``jax.sharding.Mesh``, or a
+        ``repro.api.backends.Backend``. "auto" uses the mesh backend when
+        the host has one device per machine, else the virtual one.
+      m: machine count for flat input (default 8, the paper's setup);
+        ignored for pre-sharded input.
+      w: optional per-point weights, shaped like ``x`` minus the last axis.
+      key: optional PRNG key (defaults to ``PRNGKey(seed)``).
+      seed: seed for the default key and the partitioning shuffle.
+      shuffle: shuffle flat input before sharding (balanced machines).
+      **algo_params: algorithm-specific knobs (e.g. ``epsilon`` for
+        soccer, ``rounds`` for kmeans_parallel); unknown names raise.
+
+    Returns:
+      A ``ClusterResult`` with a uniform telemetry shape for every
+      algorithm x backend combination.
+    """
+    x = np.asarray(x)
+    if x.ndim not in (2, 3):
+        raise ValueError(f"x must be (n, d) or (m, p, d), got {x.shape}")
+    if x.ndim == 3:
+        if m is not None and m != x.shape[0]:
+            raise ValueError(
+                f"m={m} conflicts with pre-sharded x of {x.shape[0]} "
+                f"machines")
+        m = x.shape[0]
+    else:
+        m = 8 if m is None else m
+    parts, w_parts, alive_parts = _as_parts(x, w, m, seed, shuffle)
+
+    bk = resolve_backend(backend, m)
+    driver = get_algorithm(algo)
+    t0 = time.perf_counter()
+    res = driver(parts, k, backend=bk, key=key, w=w_parts,
+                 alive=alive_parts, seed=seed, **algo_params)
+    res.wall_time_s = time.perf_counter() - t0
+    res.params = dict(k=k, m=m, seed=seed, **algo_params)
+    return res

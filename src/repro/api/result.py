@@ -1,0 +1,64 @@
+"""The one result shape every algorithm/backend combination returns."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def uplink_bytes(points, d: int, dtype=np.float32) -> np.ndarray:
+    """Communication volume of ``points`` uploaded d-dim rows, in bytes.
+
+    Dtype-aware so the paper's uplink comparison stays meaningful for
+    reduced-precision variants (e.g. a future bf16 upload path).
+    """
+    pts = np.asarray(points, np.int64)
+    return pts * int(d) * np.dtype(dtype).itemsize
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    """Unified result of ``repro.api.fit`` (any algorithm, any backend).
+
+    ``uplink_points``/``uplink_bytes`` are per-communication-round realized
+    machine->coordinator upload volumes (including the finalize gather
+    where the algorithm has one); ``n_hist``/``v_hist`` are populated by
+    the removal-style algorithms (SOCCER, EIM11) and ``None`` elsewhere.
+    """
+    centers: np.ndarray                 # (c, d) final centers
+    k: int                              # requested number of clusters
+    algo: str                           # registry name
+    backend: str                        # "virtual" | "mesh"
+    rounds: int                         # communication rounds used
+    uplink_points: np.ndarray           # (R,) points uploaded per round
+    uplink_bytes: np.ndarray            # (R,) same in bytes (dtype-aware)
+    n_hist: Optional[np.ndarray] = None   # live-point counts per round
+    v_hist: Optional[np.ndarray] = None   # removal thresholds per round
+    wall_time_s: float = 0.0
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def uplink_points_total(self) -> int:
+        return int(np.sum(self.uplink_points))
+
+    @property
+    def uplink_bytes_total(self) -> int:
+        return int(np.sum(self.uplink_bytes))
+
+    def cost(self, x, w=None) -> float:
+        """Centralized k-means cost of ``self.centers`` on ``x``.
+
+        Accepts ``(n, d)`` or machine-sharded ``(m, p, d)`` data (the
+        machine axis is flattened; pair with the matching ``w`` to mask
+        padding points).
+        """
+        from repro.core.metrics import centralized_cost
+        x = jnp.asarray(x)
+        if x.ndim == 3:
+            x = x.reshape(-1, x.shape[-1])
+            if w is not None:
+                w = jnp.asarray(w).reshape(-1)
+        return float(centralized_cost(x, jnp.asarray(self.centers), w))

@@ -1,0 +1,56 @@
+"""``make smoke``: one tiny ``fit()`` per registered algorithm.
+
+Runs in seconds; fails loudly if any registered algorithm stops
+returning a well-formed ClusterResult, so the examples and the facade
+can't silently rot.
+
+    PYTHONPATH=src python -m repro.api.selfcheck
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.api import fit, list_algorithms
+
+# keep the smoke run fast: tiny n, few rounds/steps where configurable
+_SMOKE_PARAMS = {
+    "soccer": dict(epsilon=0.2),
+    "kmeans_parallel": dict(rounds=2, lloyd_iters=5),
+    "eim11": dict(epsilon=0.2, max_rounds=3),
+    "lloyd": dict(iters=5),
+    "minibatch": dict(batch=128, steps=10),
+}
+
+
+def main(n: int = 2_000, d: int = 5, k: int = 4, m: int = 4) -> int:
+    rng = np.random.default_rng(0)
+    means = rng.uniform(size=(k, d)).astype(np.float32)
+    x = (means[rng.integers(0, k, n)]
+         + 0.02 * rng.normal(size=(n, d))).astype(np.float32)
+
+    failures = 0
+    for algo in list_algorithms():
+        params = _SMOKE_PARAMS.get(algo, {})
+        try:
+            res = fit(x, k, algo=algo, backend="virtual", m=m, seed=0,
+                      **params)
+            assert np.all(np.isfinite(res.centers)), "non-finite centers"
+            assert res.centers.shape[1] == d, res.centers.shape
+            assert len(res.uplink_points) == len(res.uplink_bytes)
+            cost = res.cost(x)
+            assert np.isfinite(cost) and cost >= 0.0, cost
+            print(f"smoke/{algo:16s} ok  centers={res.centers.shape[0]:3d} "
+                  f"rounds={res.rounds} "
+                  f"uplink={res.uplink_points_total}pts"
+                  f"/{res.uplink_bytes_total}B "
+                  f"cost={cost:.4g} t={res.wall_time_s:.2f}s")
+        except Exception as e:  # noqa: BLE001 — smoke reports all failures
+            failures += 1
+            print(f"smoke/{algo:16s} FAILED: {type(e).__name__}: {e}")
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(min(main(), 1))

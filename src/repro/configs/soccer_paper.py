@@ -13,9 +13,18 @@ import dataclasses
 from typing import Tuple
 
 
+_CHOICES = {
+    "blackbox": ("kmeans", "minibatch"),
+    "sharded_threshold": ("bisect", "topk"),
+    "sharded_seeding": ("d2", "kmeanspar"),
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class SoccerParams:
-    """Algorithm parameters (paper's notation)."""
+    """Algorithm parameters (paper's notation). Validated on construction
+    — a typo like ``blackbox="minbatch"`` raises instead of silently
+    falling through to the default black box."""
     k: int
     epsilon: float = 0.1
     delta: float = 0.1
@@ -31,6 +40,32 @@ class SoccerParams:
     straggler_rate: float = 0.0        # fraction of machines missing the
                                        # per-round sampling deadline (ft)
     seed: int = 0
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"SoccerParams.k must be >= 1, got {self.k}")
+        for name in ("epsilon", "delta"):
+            v = getattr(self, name)
+            if not 0.0 < v < 1.0:
+                raise ValueError(
+                    f"SoccerParams.{name} must be in (0, 1), got {v}")
+        for name, allowed in _CHOICES.items():
+            v = getattr(self, name)
+            if v not in allowed:
+                raise ValueError(
+                    f"SoccerParams.{name} must be one of "
+                    f"{' | '.join(allowed)}, got {v!r}")
+        for name in ("outlier_frac", "straggler_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(
+                    f"SoccerParams.{name} must be in [0, 1), got {v}")
+        for name, lo in (("n_machines", 1), ("max_rounds", 0),
+                         ("lloyd_iters", 1), ("minibatch_size", 1)):
+            v = getattr(self, name)
+            if v < lo:
+                raise ValueError(
+                    f"SoccerParams.{name} must be >= {lo}, got {v}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,38 +1,31 @@
 """Mesh (shard_map) deployment of SOCCER and friends.
 
-The algorithm code in core/ is written once against the comm abstraction;
-this module binds it to a real device mesh: every shard of the machine
-axes is one "machine" (local_m == 1), collectives run over the mesh.
-
-Used by the multi-pod dry-run (launch/dryrun.py lowers ``soccer_round``
-for the production meshes) and by the subprocess integration test, which
-checks Virtual == Mesh numerically on 8 host devices.
+The algorithm code in core/ is written once against the comm abstraction
+and bound to a device mesh by ``repro.api.backends.MeshBackend``: every
+shard of the machine axes is one "machine" (local_m == 1), collectives
+run over the mesh. The host driver loop lives in ONE place —
+``repro.core.soccer.run_soccer`` — and this module only keeps the
+historical mesh entry points as thin shims over it (plus the lowering
+helpers used by the launch dry-runs).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.soccer_paper import SoccerParams
 from repro.core import soccer as soccer_lib
 from repro.core.comm import MeshCluster
-from repro.core.soccer import (SoccerConstants, SoccerResult, SoccerState,
-                               derive_constants, flatten_centers, init_state)
+from repro.core.soccer import SoccerConstants, SoccerResult, SoccerState
 
 
 def mesh_cluster(mesh: Mesh, axis_names: Optional[Tuple[str, ...]] = None
                  ) -> MeshCluster:
-    axis_names = tuple(axis_names or mesh.axis_names)
-    sizes = tuple(int(mesh.shape[a]) for a in axis_names)
-    m = int(np.prod(sizes))
-    return MeshCluster(m=m, axis_names=axis_names, axis_sizes=sizes)
+    from repro.api.backends import mesh_comm
+    return mesh_comm(mesh, axis_names)
 
 
 def _state_specs(axes: Tuple[str, ...]) -> SoccerState:
@@ -48,47 +41,25 @@ def make_mesh_step(mesh: Mesh, const: SoccerConstants,
                    axis_names: Optional[Tuple[str, ...]] = None,
                    finalize: bool = False):
     """jit(shard_map(soccer_round)) over the mesh's machine axes."""
-    comm = mesh_cluster(mesh, axis_names)
-    specs = _state_specs(comm.axis_names)
+    import functools
+
+    from repro.api.backends import MeshBackend, mesh_comm
+    backend = MeshBackend(mesh, axis_names)
+    comm = mesh_comm(mesh, axis_names)
     fn = soccer_lib.soccer_finalize if finalize else soccer_lib.soccer_round
     body = functools.partial(fn, comm=comm, const=const)
-    mapped = jax.shard_map(body, mesh=mesh, in_specs=(specs,),
-                           out_specs=specs, check_vma=False)
-    return jax.jit(mapped)
+    return backend.compile(body, (soccer_lib.STATE_MARKS,),
+                           soccer_lib.STATE_MARKS)
 
 
 def run_soccer_mesh(x_parts: jax.Array, params: SoccerParams, mesh: Mesh, *,
                     axis_names: Optional[Tuple[str, ...]] = None,
                     key: Optional[jax.Array] = None,
                     eta_override: int = 0) -> SoccerResult:
-    """Driver over a real mesh. ``x_parts`` is (m, p, d): one leading slice
-    per machine, sharded over the mesh's machine axes."""
-    comm = mesh_cluster(mesh, axis_names)
-    m, p, _ = x_parts.shape
-    assert m == comm.m, (m, comm.m)
-    const = derive_constants(m * p, p, params, eta_override, m=m)
-    key = jax.random.PRNGKey(params.seed) if key is None else key
-
-    state = init_state(jnp.asarray(x_parts), const, key)
-    specs = _state_specs(comm.axis_names)
-    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
-                             is_leaf=lambda s: isinstance(s, P))
-    state = jax.device_put(state, shardings)
-
-    step = make_mesh_step(mesh, const, axis_names)
-    fin = make_mesh_step(mesh, const, axis_names, finalize=True)
-
-    rounds = 0
-    prev_n = int(state.n_remaining)
-    while rounds < const.max_rounds and int(state.n_remaining) > const.eta:
-        state = step(state)
-        rounds += 1
-        if int(state.n_remaining) >= prev_n:
-            break   # no-progress guard (see core/soccer.py)
-        prev_n = int(state.n_remaining)
-    state = fin(state)
-
-    return SoccerResult(
-        centers=flatten_centers(state), rounds=rounds, const=const,
-        n_hist=np.asarray(state.n_hist), v_hist=np.asarray(state.v_hist),
-        uplink=np.asarray(state.uplink), state=state)
+    """Thin shim: the unified driver with a MeshBackend. ``x_parts`` is
+    (m, p, d): one leading slice per machine, sharded over the mesh's
+    machine axes."""
+    from repro.api.backends import MeshBackend
+    return soccer_lib.run_soccer(
+        x_parts, params, backend=MeshBackend(mesh, axis_names), key=key,
+        eta_override=eta_override)

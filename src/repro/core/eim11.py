@@ -9,11 +9,13 @@ machine then removes the points within the threshold; a fixed fraction of
 the data is removed per round regardless of structure, so EIM11 *never
 stops early*. The benchmark surfaces exactly the two costs the paper
 criticizes: broadcast volume and machine-side distance work.
+
+Runs on any ``repro.api.backends`` backend; the per-round clustering
+write base is a traced scalar so one compilation serves every round.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Optional
 
@@ -21,7 +23,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.comm import VirtualCluster
 from repro.core.kmeans import kmeans
 from repro.core.metrics import assignment_counts
 from repro.core.reduce import reduce_to_k
@@ -35,6 +36,9 @@ class EIM11Result:
     rounds: int
     broadcast_points: int        # total points broadcast to machines
     n_hist: np.ndarray
+    uplink: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int64))
+    # points uploaded per round (two samples each) + the finalize gather
 
 
 def _weighted_quantile(d2: jax.Array, w: jax.Array, q: float) -> jax.Array:
@@ -47,27 +51,44 @@ def _weighted_quantile(d2: jax.Array, w: jax.Array, q: float) -> jax.Array:
 
 def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
               delta: float = 0.1, remove_frac: float = 0.5,
-              w: Optional[jax.Array] = None, comm=None,
+              w: Optional[jax.Array] = None,
+              alive: Optional[jax.Array] = None,
+              comm=None, backend=None,
               key: Optional[jax.Array] = None, max_rounds: int = 12,
               seed: int = 0) -> EIM11Result:
+    from repro.api.backends import CommBackend, resolve_backend
     m, p, d = x_parts.shape
-    comm = comm or VirtualCluster(m)
-    x = jnp.asarray(x_parts, jnp.float32)
-    w = jnp.ones((m, p), jnp.float32) if w is None else w
-    n = m * p
-    # per-round upload / clustering growth (paper: 9·k·n^ε·log(n/δ))
-    s = min(int(math.ceil(9 * k * (n ** epsilon) * math.log(n / delta))), n)
+    if backend is None and comm is not None:
+        backend = CommBackend(comm)
+    backend = resolve_backend(backend, m)
+    comm = backend.make_comm(m)
+
+    from repro.core.soccer import effective_n
+    alive0 = jnp.ones((m, p), bool) if alive is None else jnp.asarray(
+        alive, bool)
+    n = int(np.sum(np.asarray(alive0)))
+    # per-round upload / clustering growth (paper: 9·k·n^ε·log(n/δ));
+    # sized from the live *weight* mass, like SOCCER's eta (weighted
+    # input stands for duplicated points)
+    n_w = effective_n(m, p, w, alive0)
+    s = min(int(math.ceil(9 * k * (n_w ** epsilon)
+                          * math.log(n_w / delta))), n)
+
+    x = backend.put(jnp.asarray(x_parts, jnp.float32), "machine")
+    w = jnp.ones((m, p), jnp.float32) if w is None else jnp.asarray(
+        w, jnp.float32)
+    w = backend.put(w, "machine")
+    alive_dev = backend.put(alive0, "machine")
     cap = min(p, s)
     rows = max_rounds * s
     key = jax.random.PRNGKey(seed) if key is None else key
 
-    @functools.partial(jax.jit, static_argnames=("base",))
-    def round_fn(kk, alive, centers, valid, base):
+    def round_fn(kk, x, w, alive, centers, valid, base):
         n_local = jnp.sum(alive, axis=1).astype(jnp.int32)
         n_vec = comm.all_machines(n_local)
         k1, k2 = jax.random.split(kk)
-        s1, _, _ = draw_global_sample(comm, k1, x, w, alive, n_vec, s, cap)
-        s2, w2, _ = draw_global_sample(comm, k2, x, w, alive, n_vec, s, cap)
+        s1, _, r1 = draw_global_sample(comm, k1, x, w, alive, n_vec, s, cap)
+        s2, w2, r2 = draw_global_sample(comm, k2, x, w, alive, n_vec, s, cap)
         # coordinator adds the whole first sample to the clustering
         centers = jax.lax.dynamic_update_slice(centers, s1, (base, 0))
         row_ids = jnp.arange(rows)
@@ -79,38 +100,55 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
         d2x = jax.vmap(lambda xx: ops.min_dist(xx, centers, valid)[0])(x)
         alive = alive & (d2x > v)
         n_rem = comm.psum(jnp.sum(alive, axis=1).astype(jnp.int32))
-        return alive, centers, valid, n_rem
+        return alive, centers, valid, n_rem, r1 + r2
 
-    alive = jnp.ones((m, p), bool)
+    def final_fn(kk, x, w, alive, centers, valid, base):
+        n_local = jnp.sum(alive, axis=1).astype(jnp.int32)
+        n_vec = comm.all_machines(n_local)
+        kf1, kf2 = jax.random.split(kk)
+        v_pts, v_w, real = draw_global_sample(comm, kf1, x, w, alive, n_vec,
+                                              s, cap)
+        c_fin, _ = kmeans(kf2, v_pts, v_w, k)
+        centers = jax.lax.dynamic_update_slice(centers, c_fin, (base, 0))
+        row_ids = jnp.arange(rows)
+        valid = valid | ((row_ids >= base) & (row_ids < base + k))
+        counts = assignment_counts(comm, x, w, centers, valid)
+        final = reduce_to_k(kf2, centers, counts * valid, k)
+        return final, real
+
+    step = backend.compile(
+        round_fn,
+        ("rep", "machine", "machine", "machine", "rep", "rep", "rep"),
+        ("machine", "rep", "rep", "rep", "rep"))
+    finalize = backend.compile(
+        final_fn,
+        ("rep", "machine", "machine", "machine", "rep", "rep", "rep"),
+        ("rep", "rep"))
+
+    alive = alive_dev
     centers = jnp.zeros((rows, d), jnp.float32)
     valid = jnp.zeros((rows,), bool)
     n_hist = [n]
+    uplink = []
     rounds = 0
     broadcast = 0
     n_rem = n
     while n_rem > s and rounds < max_rounds:
         kk, key = jax.random.split(key)
-        alive, centers, valid, n_rem_a = round_fn(kk, alive, centers, valid,
-                                                  base=rounds * s)
+        alive, centers, valid, n_rem_a, up = step(
+            kk, x, w, alive, centers, valid, jnp.int32(rounds * s))
         n_rem = int(n_rem_a)
         rounds += 1
         broadcast += int(np.asarray(valid).sum())  # coordinator re-broadcasts C
         n_hist.append(n_rem)
+        uplink.append(int(up))
 
     # final: survivors -> coordinator -> k-means; then weighted reduction
-    kf1, kf2, key = jax.random.split(key, 3)
-    n_local = jnp.sum(alive, axis=1).astype(jnp.int32)
-    n_vec = comm.all_machines(n_local)
-    v_pts, v_w, _ = draw_global_sample(comm, kf1, x, w, alive, n_vec, s, cap)
-    c_fin, _ = kmeans(kf2, v_pts, v_w, k)
-    centers = jax.lax.dynamic_update_slice(
-        centers, c_fin, (min(rounds * s, rows - k), 0))
-    row_ids = jnp.arange(rows)
+    kf, key = jax.random.split(key)
     base = min(rounds * s, rows - k)
-    valid = valid | ((row_ids >= base) & (row_ids < base + k))
-
-    counts = assignment_counts(comm, x, w, centers, valid)
-    final = reduce_to_k(kf2, centers, counts * valid, k)
+    final, real = finalize(kf, x, w, alive, centers, valid, jnp.int32(base))
+    uplink.append(int(real))
     return EIM11Result(centers=np.asarray(final), rounds=rounds,
                        broadcast_points=broadcast,
-                       n_hist=np.asarray(n_hist))
+                       n_hist=np.asarray(n_hist),
+                       uplink=np.asarray(uplink, np.int64))

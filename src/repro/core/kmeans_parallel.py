@@ -8,6 +8,10 @@ after ``rounds`` rounds the oversampled set is weighed by a full
 assignment pass and reduced to k with weighted k-means. k-means‖ has **no
 stopping mechanism** — ``rounds`` is the hyper-parameter the paper
 criticizes.
+
+The driver runs on any ``repro.api.backends`` backend (virtual or mesh);
+the per-round write base is a traced scalar, so one compilation serves
+every round.
 """
 from __future__ import annotations
 
@@ -18,10 +22,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
-from repro.core.comm import VirtualCluster
-from repro.core.metrics import assignment_counts, distributed_cost
+from repro.core.metrics import assignment_counts
 from repro.core.reduce import reduce_to_k
 from repro.core.sampling import (exclusive_cumsum, global_weighted_choice,
                                  scatter_at)
@@ -37,8 +39,7 @@ class KMeansParallelResult:
     selected_hist: np.ndarray    # points added per round
 
 
-def _one_round(comm, key, x, w, centers, valid, base: int, cap: int,
-               l: float):
+def _one_round(comm, l: float, cap: int, key, x, w, centers, valid, base):
     """One k-means‖ oversampling round; writes into rows [base, base+cap)."""
     d2 = jax.vmap(lambda xx: ops.min_dist(xx, centers, valid)[0])(x)
     phi = comm.psum(jnp.sum(w * d2, axis=1))
@@ -68,41 +69,55 @@ def _one_round(comm, key, x, w, centers, valid, base: int, cap: int,
 def run_kmeans_parallel(x_parts: jax.Array, k: int, rounds: int, *,
                         l: Optional[float] = None,
                         w: Optional[jax.Array] = None,
-                        comm=None, key: Optional[jax.Array] = None,
+                        comm=None, backend=None,
+                        key: Optional[jax.Array] = None,
                         lloyd_iters: int = 25,
                         oversample_slack: float = 3.0,
                         seed: int = 0) -> KMeansParallelResult:
-    """Driver (VirtualCluster by default); x_parts is (m, p, d)."""
+    """Driver over any backend (virtual by default); x_parts is (m, p, d)."""
+    from repro.api.backends import CommBackend, resolve_backend
     m, p, d = x_parts.shape
-    comm = comm or VirtualCluster(m)
-    x = jnp.asarray(x_parts, jnp.float32)
-    w = jnp.ones((m, p), jnp.float32) if w is None else w
+    if backend is None and comm is not None:
+        backend = CommBackend(comm)
+    backend = resolve_backend(backend, m)
+    comm = backend.make_comm(m)
+
+    x = backend.put(jnp.asarray(x_parts, jnp.float32), "machine")
+    w = jnp.ones((m, p), jnp.float32) if w is None else jnp.asarray(
+        w, jnp.float32)
+    w = backend.put(w, "machine")
     l = float(l if l is not None else 2 * k)
     cap = int(oversample_slack * l) + 16
     rows = 1 + rounds * cap
     key = jax.random.PRNGKey(seed) if key is None else key
 
-    @jax.jit
-    def seed_init(kk):
+    def seed_init(kk, x, w):
         c0 = global_weighted_choice(kk, comm, w, x)
         centers = jnp.zeros((rows, d), jnp.float32).at[0].set(c0)
         valid = jnp.zeros((rows,), bool).at[0].set(True)
         return centers, valid
 
-    step = jax.jit(functools.partial(_one_round, comm, l=l, cap=cap),
-                   static_argnames=("base",))
+    seed_fn = backend.compile(seed_init, ("rep", "machine", "machine"),
+                              ("rep", "rep"))
+    step = backend.compile(
+        functools.partial(_one_round, comm, l, cap),
+        ("rep", "machine", "machine", "rep", "rep", "rep"),
+        ("rep", "rep", "rep", "rep"))
+    counts_fn = backend.compile(
+        lambda x, w, c, v: assignment_counts(comm, x, w, c, v),
+        ("machine", "machine", "rep", "rep"), "rep")
 
     k0, key = jax.random.split(key)
-    centers, valid = seed_init(k0)
+    centers, valid = seed_fn(k0, x, w)
     phi_hist, sel_hist = [], []
     for r in range(rounds):
         kr, key = jax.random.split(key)
         centers, valid, phi, nsel = step(kr, x, w, centers, valid,
-                                         base=1 + r * cap)
+                                         jnp.int32(1 + r * cap))
         phi_hist.append(float(phi))
         sel_hist.append(int(nsel))
 
-    counts = assignment_counts(comm, x, w, centers, valid)
+    counts = counts_fn(x, w, centers, valid)
     kf, key = jax.random.split(key)
     final = reduce_to_k(kf, centers, counts * valid, k, lloyd_iters)
 

@@ -27,7 +27,6 @@ import numpy as np
 from jax import lax
 
 from repro.configs.soccer_paper import SoccerParams
-from repro.core.comm import VirtualCluster
 from repro.core.kmeans import kmeans
 from repro.core.minibatch import minibatch_kmeans
 from repro.core.sampling import draw_global_sample
@@ -239,27 +238,71 @@ def flatten_centers(state: SoccerState) -> np.ndarray:
     return c[valid]
 
 
+# Placement marks for SoccerState (see repro.api.backends): data leaves
+# carry the machine axis, bookkeeping is replicated.
+STATE_MARKS = SoccerState(
+    x="machine", w="machine", alive="machine", machine_ok="machine",
+    key="rep", round_idx="rep", n_remaining="rep", centers="rep",
+    centers_valid="rep", v_hist="rep", n_hist="rep", uplink="rep")
+
+
+def effective_n(m: int, p: int, w: Optional[jax.Array],
+                alive: Optional[jax.Array]) -> int:
+    """Instance size for the paper's formulas: total live *weight*.
+
+    Weighted inputs represent ``w`` duplicated points, so sizing the
+    coordinator from the raw alive count would derive a too-small eta;
+    the weight mass is what the guarantees are stated over.
+    """
+    if w is None and alive is None:
+        return m * p
+    w_np = np.ones((m, p), np.float64) if w is None else np.asarray(
+        w, np.float64)
+    if alive is not None:
+        w_np = np.where(np.asarray(alive), w_np, 0.0)
+    return max(int(round(float(np.sum(w_np)))), 1)
+
+
 def run_soccer(x_parts: jax.Array, params: SoccerParams, *,
+               backend=None,
                key: Optional[jax.Array] = None,
                w: Optional[jax.Array] = None,
                alive: Optional[jax.Array] = None,
-               eta_override: int = 0) -> SoccerResult:
-    """Single-device (VirtualCluster) driver: x_parts is (m, p, d)."""
+               eta_override: int = 0,
+               on_round=None) -> SoccerResult:
+    """THE SOCCER host driver — the only round loop in the codebase.
+
+    ``backend`` is anything ``repro.api.backends.resolve_backend``
+    accepts ("virtual" default, "mesh", "auto", a Mesh, or a Backend);
+    the stopping mechanism, no-progress guard, and round accounting below
+    are shared by every deployment. ``on_round(round_idx, state)`` is an
+    optional host callback after each round (checkpointing, failure
+    injection); if it returns a state, the loop continues from it.
+    """
+    from repro.api.backends import resolve_backend
     m, p, _ = x_parts.shape
-    comm = VirtualCluster(m)
-    n = int(np.sum(np.asarray(alive))) if alive is not None else m * p
+    backend = resolve_backend(backend, m)
+    comm = backend.make_comm(m)
+    n = effective_n(m, p, w, alive)
     const = derive_constants(n, p, params, eta_override, m=m)
     key = jax.random.PRNGKey(params.seed) if key is None else key
-    state = init_state(x_parts, const, key, w=w, alive=alive)
+    state = init_state(jnp.asarray(x_parts), const, key, w=w, alive=alive)
+    state = backend.put(state, STATE_MARKS)
 
-    step = jax.jit(functools.partial(soccer_round, comm=comm, const=const))
-    fin = jax.jit(functools.partial(soccer_finalize, comm=comm, const=const))
+    step = backend.compile(
+        functools.partial(soccer_round, comm=comm, const=const),
+        (STATE_MARKS,), STATE_MARKS)
+    fin = backend.compile(
+        functools.partial(soccer_finalize, comm=comm, const=const),
+        (STATE_MARKS,), STATE_MARKS)
 
     rounds = 0
     prev_n = int(state.n_remaining)
     while rounds < const.max_rounds and int(state.n_remaining) > const.eta:
         state = step(state)
         rounds += 1
+        if on_round is not None:
+            state = on_round(rounds, state) or state
         # no-progress guard: if the threshold cannot remove anything
         # (e.g. the truncation mass exceeds N — coordinator far too small
         # for this n), further rounds are pure overhead; finalize on a

@@ -1,0 +1,150 @@
+"""The repro.api facade: registry, parity with legacy drivers, result
+shape invariants, params validation, and the weighted-sizing fix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ClusterResult, fit, list_algorithms
+from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
+from repro.core.metrics import centralized_cost
+from repro.core.soccer import derive_constants, run_soccer
+from repro.data.synthetic import gaussian_mixture, shard_points
+
+M, K = 8, 5
+
+# per-algorithm knobs keeping this suite fast at tiny n
+TINY = {
+    "soccer": dict(epsilon=0.2),
+    "kmeans_parallel": dict(rounds=2, lloyd_iters=5),
+    "eim11": dict(epsilon=0.2, max_rounds=3),
+    "lloyd": dict(iters=5),
+    "minibatch": dict(batch=128, steps=10),
+}
+# upper bound on communication rounds for each algorithm at TINY params
+MAX_ROUNDS = {"soccer": 7 + 1, "kmeans_parallel": 2, "eim11": 3,
+              "lloyd": 1, "minibatch": 1}
+
+
+@pytest.fixture(scope="module")
+def data():
+    spec = GaussianMixtureSpec(n=6_000, dim=8, k=K, sigma=0.001, seed=11)
+    x, _, means = gaussian_mixture(spec)
+    return x, jnp.asarray(shard_points(x, M)), means
+
+
+def test_fit_soccer_bit_identical_to_legacy(data):
+    x, parts, _ = data
+    legacy = run_soccer(parts, SoccerParams(k=K, epsilon=0.1, seed=3))
+    res = fit(parts, K, algo="soccer", backend="virtual", epsilon=0.1,
+              seed=3)
+    assert np.array_equal(res.centers, legacy.centers)
+    assert res.rounds == legacy.rounds
+    assert np.array_equal(res.uplink_points,
+                          legacy.uplink[: legacy.rounds + 1])
+
+
+def test_registry_all_algos_well_formed(data):
+    x, parts, _ = data
+    d = parts.shape[-1]
+    algos = list_algorithms()
+    assert set(algos) >= {"soccer", "kmeans_parallel", "eim11", "lloyd",
+                          "minibatch"}
+    for algo in algos:
+        res = fit(parts, K, algo=algo, backend="virtual", seed=0,
+                  **TINY.get(algo, {}))
+        assert isinstance(res, ClusterResult)
+        assert res.algo == algo and res.backend == "virtual"
+        assert res.centers.ndim == 2 and res.centers.shape[1] == d
+        assert np.all(np.isfinite(res.centers)), algo
+        assert 0 <= res.rounds <= MAX_ROUNDS[algo], (algo, res.rounds)
+        # uplink histories: parallel points/bytes, nonneg, bytes = pts*d*4
+        assert len(res.uplink_points) == len(res.uplink_bytes)
+        assert len(res.uplink_points) >= min(res.rounds, 1)
+        assert np.all(res.uplink_points >= 0)
+        assert np.array_equal(res.uplink_bytes, res.uplink_points * d * 4)
+        if res.n_hist is not None:   # removal algorithms: N never grows
+            assert all(res.n_hist[i + 1] <= res.n_hist[i]
+                       for i in range(len(res.n_hist) - 1)), algo
+        cost = res.cost(x)
+        assert np.isfinite(cost) and cost >= 0.0
+        assert res.wall_time_s > 0.0
+
+
+def test_fit_flat_input_with_padding(data):
+    x, _, means = data
+    xf = np.asarray(x)[:5_995]          # not divisible by m=8 -> padding
+    res = fit(xf, K, algo="soccer", backend="virtual", m=M, epsilon=0.2,
+              seed=0)
+    assert np.all(np.isfinite(res.centers))
+    ref = float(centralized_cost(jnp.asarray(xf), jnp.asarray(means)))
+    assert res.cost(xf) <= 5.0 * ref    # padding never becomes a center
+
+
+def test_fit_unknown_algo_and_param():
+    x = np.zeros((64, 3), np.float32)
+    with pytest.raises(ValueError, match="soccer"):
+        fit(x, 2, algo="nope")
+    with pytest.raises(TypeError, match="not_a_knob"):
+        fit(x, 2, algo="soccer", not_a_knob=1)
+
+
+def test_weighted_input_sizes_instance_by_weight(data):
+    """run_soccer with w=3 must derive the same eta as 3x the points."""
+    _, parts, _ = data
+    m, p, _ = parts.shape
+    params = SoccerParams(k=K, epsilon=0.1, seed=0)
+    w = jnp.full((m, p), 3.0)
+    res = run_soccer(parts, params, w=w)
+    const_3n = derive_constants(3 * m * p, p, params, m=m)
+    const_1n = derive_constants(m * p, p, params, m=m)
+    assert res.const.eta == const_3n.eta
+    assert const_3n.eta > const_1n.eta  # the pre-fix (alive-count) value
+
+
+def test_eim11_weighted_sizing(data):
+    """EIM11's per-round sample is sized from weight mass, like eta."""
+    import math
+
+    from repro.core.eim11 import run_eim11
+    _, parts, _ = data
+    m, p, _ = parts.shape
+    w = jnp.full((m, p), 3.0)
+    res = run_eim11(parts, K, 0.1, w=w, max_rounds=2, seed=0)
+    k, n_w, delta = K, 3 * m * p, 0.1
+    s_expected = min(int(math.ceil(
+        9 * k * (n_w ** 0.1) * math.log(n_w / delta))), m * p)
+    # uplink per round is two samples of s points each (apportionment
+    # may leave a few units of largest-remainder slack)
+    assert abs(int(res.uplink[0]) - 2 * s_expected) <= 8
+
+
+def test_soccer_params_validation():
+    with pytest.raises(ValueError, match="blackbox"):
+        SoccerParams(k=5, blackbox="minbatch")
+    with pytest.raises(ValueError, match="epsilon"):
+        SoccerParams(k=5, epsilon=0.0)
+    with pytest.raises(ValueError, match="delta"):
+        SoccerParams(k=5, delta=1.0)
+    with pytest.raises(ValueError, match="k must be"):
+        SoccerParams(k=0)
+    with pytest.raises(ValueError, match="sharded_threshold"):
+        SoccerParams(k=5, sharded_threshold="top-k")
+    with pytest.raises(ValueError, match="sharded_seeding"):
+        SoccerParams(k=5, sharded_seeding="kpp")
+    with pytest.raises(ValueError, match="straggler_rate"):
+        SoccerParams(k=5, straggler_rate=1.0)
+    # valid construction untouched
+    SoccerParams(k=5, epsilon=0.05, blackbox="minibatch",
+                 sharded_threshold="topk", sharded_seeding="kmeanspar")
+
+
+def test_cost_helper_matches_centralized(data):
+    x, parts, _ = data
+    res = fit(parts, K, algo="lloyd", backend="virtual", iters=5, seed=0)
+    direct = float(centralized_cost(jnp.asarray(x),
+                                    jnp.asarray(res.centers)))
+    assert res.cost(x) == pytest.approx(direct, rel=1e-6)
+    # sharded input with weights gives the same total
+    w = jnp.ones(parts.shape[:2])
+    assert res.cost(parts, w) == pytest.approx(direct, rel=1e-5)

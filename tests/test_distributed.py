@@ -1,5 +1,8 @@
-"""Mesh (shard_map) == Virtual equivalence, run in a subprocess with 8
-host devices so the main test process keeps its single real device."""
+"""Mesh (shard_map) == Virtual equivalence through the facade, run in a
+subprocess with 8 host devices so the main test process keeps its single
+real device. Covers: SOCCER virtual/mesh numerics, facade bit-parity
+with the legacy drivers on both backends, and one mesh fit() per
+registered algorithm."""
 import json
 import os
 import pathlib
@@ -13,6 +16,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import numpy as np, jax, jax.numpy as jnp
+from repro.api import MeshBackend, fit, list_algorithms
 from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
 from repro.data.synthetic import gaussian_mixture, shard_points
 from repro.core.soccer import run_soccer
@@ -23,8 +27,7 @@ spec = GaussianMixtureSpec(n=8_000, dim=10, k=5, sigma=0.001, seed=3)
 x, _, _ = gaussian_mixture(spec)
 parts = jnp.asarray(shard_points(x, 8))
 xg = jnp.asarray(x)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
 out = {}
 for sharded in (False, True):
     params = SoccerParams(k=5, epsilon=0.1, seed=3,
@@ -39,6 +42,33 @@ for sharded in (False, True):
     out[f"centers_allclose_{sharded}"] = bool(
         rv.centers.shape == rm.centers.shape
         and np.allclose(rv.centers, rm.centers, atol=1e-3))
+
+# facade must be bit-identical to the legacy drivers on both backends
+params = SoccerParams(k=5, epsilon=0.1, seed=3)
+rv = run_soccer(parts, params)
+rm = run_soccer_mesh(parts, params, mesh)
+fv = fit(parts, 5, algo="soccer", backend="virtual", epsilon=0.1, seed=3)
+fm = fit(parts, 5, algo="soccer", backend=MeshBackend(mesh), epsilon=0.1,
+         seed=3)
+out["facade_virtual_identical"] = bool(
+    np.array_equal(fv.centers, rv.centers) and fv.rounds == rv.rounds)
+out["facade_mesh_identical"] = bool(
+    np.array_equal(fm.centers, rm.centers) and fm.rounds == rm.rounds)
+
+# every registered algorithm runs on the mesh backend
+tiny = {"soccer": dict(epsilon=0.2),
+        "kmeans_parallel": dict(rounds=2, lloyd_iters=5),
+        "eim11": dict(epsilon=0.2, max_rounds=3),
+        "lloyd": dict(iters=5),
+        "minibatch": dict(batch=128, steps=10)}
+mesh_ok = {}
+for algo in list_algorithms():
+    r = fit(parts, 5, algo=algo, backend=MeshBackend(mesh), seed=0,
+            **tiny.get(algo, {}))
+    mesh_ok[algo] = bool(np.all(np.isfinite(r.centers))
+                         and r.backend == "mesh"
+                         and np.isfinite(r.cost(xg)))
+out["mesh_algos"] = mesh_ok
 print("RESULT " + json.dumps(out))
 """
 
@@ -61,3 +91,8 @@ def test_virtual_equals_mesh_subprocess():
     # sharded-coordinator mode: same rounds, comparable cost
     assert out["rounds_match_True"]
     assert out["mesh_cost_True"] <= 1.5 * out["virtual_cost_True"] + 1e-3
+    # facade == legacy, bit-identical on both backends
+    assert out["facade_virtual_identical"]
+    assert out["facade_mesh_identical"]
+    # all five algorithms produce finite results on the mesh backend
+    assert all(out["mesh_algos"].values()), out["mesh_algos"]

@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all smoke bench-kernels bench
+.PHONY: test test-all smoke bench-kernels bench scenarios lint
 
 smoke:           ## quickstart example + one fit() per registered algorithm
 	$(PYTHON) examples/quickstart.py
@@ -19,3 +19,9 @@ bench-kernels:   ## kernel micro-bench + roofline smoke (quick shapes)
 
 bench:           ## all paper-table benchmarks at full CPU-feasible sizes
 	$(PYTHON) -m benchmarks.run
+
+scenarios:       ## quick paper-suite scenario sweep -> BENCH_scenarios.json
+	$(PYTHON) -m repro.scenarios.run --suite paper --quick
+
+lint:            ## CI lint job (critical rules only; config in ruff.toml)
+	ruff check src tests benchmarks

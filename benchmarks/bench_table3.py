@@ -1,6 +1,8 @@
 """Paper Table 3: tiny coordinator (eps=0.01) -> multi-round SOCCER, vs
 k-means|| run until it matches SOCCER's cost (its hidden hyper-parameter).
-Both sides go through ``repro.api.fit``.
+Both sides go through ``repro.api.fit``; the heavy-tailed dataset comes
+from the scenario lab (``repro.scenarios``) so this table and the
+``heavy_tailed`` scenario stay the same distribution by construction.
 """
 from __future__ import annotations
 
@@ -10,6 +12,7 @@ from benchmarks.common import emit, save_json
 from repro.api import fit
 from repro.configs.soccer_paper import GaussianMixtureSpec
 from repro.data.synthetic import gaussian_mixture, shard_points
+from repro.scenarios import get_scenario
 
 M = 8
 
@@ -21,14 +24,14 @@ def run(n: int = 60_000, k: int = 25, eta: int = 7000,
     well below n (eta >= ~117*d_k), and Gaussian mixtures separate in one
     round at ANY workable eta (Thm 7.1) — the paper's own multi-round
     Table-3 rows are its heavy-tailed sets (KDDCup: 7-11 rounds). We use
-    the KDD analogue + a small coordinator (eta=7000): SOCCER runs 2+
-    rounds with the paper's signature shrink pattern (60000 -> 18182 ->
-    1682), each round cheaper than the last."""
-    from benchmarks.common import kdd_like
+    the scenario lab's heavy-tailed generator + a small coordinator
+    (eta=7000): SOCCER runs 2+ rounds with the paper's signature shrink
+    pattern, each round cheaper than the last."""
     gau, _, _ = gaussian_mixture(
         GaussianMixtureSpec(n=n, dim=15, k=k, sigma=0.001))
+    heavy = get_scenario("heavy_tailed").make_data(quick=False).x
     rows = []
-    for name, x in (("Gau", gau), ("KDD~", kdd_like(n))):
+    for name, x in (("Gau", gau), ("KDD~", heavy)):
         parts = jnp.asarray(shard_points(x, M))
         xg = jnp.asarray(x)
         res = fit(parts, k, algo="soccer", backend="virtual",

@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller n, fewer baselines")
     ap.add_argument("--only", default=None,
-                    help="table2|table3|minibatch|kernels|eim11")
+                    help="table2|table3|minibatch|kernels|eim11|scenarios")
     args = ap.parse_args()
 
     from benchmarks import (bench_eim11, bench_kernels, bench_minibatch,
@@ -44,6 +44,13 @@ def main() -> None:
     if args.only in (None, "kernels"):
         print("# Kernel micro-benchmarks + TPU roofline projection")
         bench_kernels.run(quick=args.quick)
+    if args.only == "scenarios":
+        # full-suite sweeps have their own CLI (repro.scenarios.run);
+        # this entry is the quick perf-trajectory slice CI tracks.
+        print("# Scenario lab: paper suite (quick sweep)")
+        from repro.scenarios.run import main as scenarios_main
+        scenarios_main(["--suite", "paper", "--quick",
+                        "--out", "BENCH_scenarios.json"])
     print(f"# total benchmark wall time: {time.time()-t0:.0f}s")
 
 

@@ -29,6 +29,10 @@ from repro.core.soccer import run_soccer
 _SOCCER_FIELDS = {f.name for f in dataclasses.fields(SoccerParams)}
 
 
+def _uplink_dtype(backend) -> str:
+    return getattr(backend, "uplink_dtype", "float32")
+
+
 def _reject_unknown(algo: str, params: dict, allowed: set):
     unknown = sorted(set(params) - allowed)
     if unknown:
@@ -53,10 +57,14 @@ def fit_soccer(x_parts, k: int, *, backend, key=None, w=None, alive=None,
     return ClusterResult(
         centers=res.centers, k=k, algo="soccer", backend=backend.name,
         rounds=res.rounds, uplink_points=np.asarray(up, np.int64),
-        uplink_bytes=uplink_bytes(up, d),
+        uplink_bytes=uplink_bytes(up, d, dtype=_uplink_dtype(backend)),
         n_hist=res.n_hist[: res.rounds + 1],
         v_hist=res.v_hist[: res.rounds],
         extra={"const": res.const, "state": res.state, "raw": res})
+
+
+# SOCCER's host loop exposes on_round, so fit(failure_plan=...) works.
+fit_soccer.supports_failure_plan = True
 
 
 @register_algorithm("kmeans_parallel")
@@ -78,7 +86,7 @@ def fit_kmeans_parallel(x_parts, k: int, *, backend, key=None, w=None,
     return ClusterResult(
         centers=res.centers, k=k, algo="kmeans_parallel",
         backend=backend.name, rounds=res.rounds, uplink_points=up,
-        uplink_bytes=uplink_bytes(up, d),
+        uplink_bytes=uplink_bytes(up, d, dtype=_uplink_dtype(backend)),
         extra={"phi_hist": res.phi_hist, "oversampled": res.oversampled,
                "raw": res})
 
@@ -97,7 +105,9 @@ def fit_eim11(x_parts, k: int, *, backend, key=None, w=None, alive=None,
     return ClusterResult(
         centers=res.centers, k=k, algo="eim11", backend=backend.name,
         rounds=res.rounds, uplink_points=np.asarray(res.uplink, np.int64),
-        uplink_bytes=uplink_bytes(res.uplink, d), n_hist=res.n_hist,
+        uplink_bytes=uplink_bytes(res.uplink, d,
+                                  dtype=_uplink_dtype(backend)),
+        n_hist=res.n_hist,
         extra={"broadcast_points": res.broadcast_points, "raw": res})
 
 
@@ -116,7 +126,9 @@ def _fit_central(method: str, x_parts, k, backend, key, w, alive, seed,
     key = jax.random.PRNGKey(seed) if key is None else key
 
     def central(kk, xp, wp):
-        xa = comm.all_machines(xp).reshape(-1, d)
+        from repro.api.backends import quantize_uplink
+        xa = quantize_uplink(comm.all_machines(xp).reshape(-1, d),
+                             _uplink_dtype(backend))
         wa = comm.all_machines(wp).reshape(-1)
         if method == "minibatch":
             return minibatch_kmeans(kk, xa, wa, k, **bb_kw)
@@ -130,7 +142,7 @@ def _fit_central(method: str, x_parts, k, backend, key, w, alive, seed,
     return ClusterResult(
         centers=np.asarray(centers), k=k, algo=method,
         backend=backend.name, rounds=1, uplink_points=up,
-        uplink_bytes=uplink_bytes(up, d),
+        uplink_bytes=uplink_bytes(up, d, dtype=_uplink_dtype(backend)),
         extra={"blackbox_cost": float(cost)})
 
 

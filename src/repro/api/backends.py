@@ -22,15 +22,33 @@ import dataclasses
 from typing import Any, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.comm import MeshCluster, VirtualCluster
+from repro.core.sampling import quantize_uplink  # noqa: F401  (the one
+# shared payload-rounding helper; re-exported here because backends own
+# the uplink_dtype contract)
 
 # Marks for the leaves of compiled-function argument/result pytrees.
 MACHINE = "machine"        # (local_m, ...) leading machine axis
 REPLICATED = "rep"         # identical value on every machine
+
+# Supported machine->coordinator upload precisions (see uplink_dtype on
+# the backends): points are rounded to this dtype before the scatter-psum
+# "upload" and accounted at its width in ClusterResult.uplink_bytes.
+UPLINK_DTYPES = ("float32", "bfloat16", "float16")
+
+
+def check_uplink_dtype(dtype) -> str:
+    name = str(jnp.dtype(dtype) if not isinstance(dtype, str) else dtype)
+    if name not in UPLINK_DTYPES:
+        raise ValueError(
+            f"unsupported uplink_dtype {dtype!r}: expected one of "
+            f"{', '.join(UPLINK_DTYPES)}")
+    return name
 
 
 def _shard_map(fn, mesh: Mesh, in_specs, out_specs):
@@ -54,7 +72,14 @@ def mesh_comm(mesh: Mesh, axis_names: Optional[Tuple[str, ...]] = None
 
 @runtime_checkable
 class Backend(Protocol):
-    """What a driver needs: a comm, data placement, and compilation."""
+    """What a driver needs: a comm, data placement, and compilation.
+
+    Backends may additionally carry ``uplink_dtype`` (one of
+    ``UPLINK_DTYPES``) — drivers read it with ``getattr(backend,
+    "uplink_dtype", "float32")``, quantize upload payloads with
+    ``quantize_uplink`` and account ``ClusterResult.uplink_bytes`` at
+    that width.
+    """
     name: str
 
     def make_comm(self, m: int):
@@ -71,6 +96,7 @@ class Backend(Protocol):
 class VirtualBackend:
     """Single-device execution: machine axis is a plain array axis."""
     name: str = "virtual"
+    uplink_dtype: str = "float32"
 
     def make_comm(self, m: int) -> VirtualCluster:
         return VirtualCluster(m)
@@ -93,6 +119,7 @@ class CommBackend:
     """
     comm: Any
     name: str = "virtual"
+    uplink_dtype: str = "float32"
 
     def make_comm(self, m: int):
         return self.comm
@@ -112,6 +139,7 @@ class MeshBackend:
     mesh: Mesh
     axis_names: Optional[Tuple[str, ...]] = None
     name: str = "mesh"
+    uplink_dtype: str = "float32"
 
     @property
     def machine_axes(self) -> Tuple[str, ...]:
@@ -143,22 +171,37 @@ class MeshBackend:
         return jax.jit(mapped)
 
 
-def resolve_backend(backend, m: int) -> Backend:
+def resolve_backend(backend, m: int, uplink_dtype=None) -> Backend:
     """Accepts a Backend, a Mesh, or "virtual" | "mesh" | "auto".
 
     "auto" picks the mesh backend when the host has at least ``m``
     addressable devices (one machine per device), else the virtual one.
+    ``uplink_dtype`` (if given) sets the upload precision on the
+    resolved backend; already-constructed Backend instances are rebuilt
+    via ``dataclasses.replace`` when it conflicts with theirs.
     """
+    ud = None if uplink_dtype is None else check_uplink_dtype(uplink_dtype)
     if backend is None:
         backend = "virtual"
     if isinstance(backend, Mesh):
-        return MeshBackend(backend)
+        return MeshBackend(backend, uplink_dtype=ud or "float32")
     if not isinstance(backend, str):
-        return backend  # already a Backend (duck-typed)
+        # already a Backend (duck-typed)
+        if ud and getattr(backend, "uplink_dtype", "float32") != ud:
+            if not (dataclasses.is_dataclass(backend) and any(
+                    f.name == "uplink_dtype"
+                    for f in dataclasses.fields(backend))):
+                raise ValueError(
+                    f"backend {type(backend).__name__} does not carry an "
+                    f"uplink_dtype field; construct it with "
+                    f"uplink_dtype={ud!r} instead of passing the knob to "
+                    f"fit()")
+            return dataclasses.replace(backend, uplink_dtype=ud)
+        return backend
     if backend == "auto":
         backend = "mesh" if (m > 1 and jax.device_count() >= m) else "virtual"
     if backend == "virtual":
-        return VirtualBackend()
+        return VirtualBackend(uplink_dtype=ud or "float32")
     if backend == "mesh":
         if jax.device_count() < m:
             raise ValueError(
@@ -166,7 +209,8 @@ def resolve_backend(backend, m: int) -> Backend:
                 f"got {jax.device_count()}; use backend='virtual' or fewer "
                 f"machines")
         devs = np.asarray(jax.devices()[:m]).reshape(m)
-        return MeshBackend(Mesh(devs, ("machines",)))
+        return MeshBackend(Mesh(devs, ("machines",)),
+                           uplink_dtype=ud or "float32")
     raise ValueError(
         f"unknown backend {backend!r}: expected 'virtual', 'mesh', 'auto', "
         f"a jax Mesh, or a Backend instance")

@@ -4,11 +4,17 @@
     res = fit(x, k=25, algo="soccer", backend="auto", epsilon=0.1)
     res.centers, res.rounds, res.uplink_points, res.cost(x)
 
-``x`` is either flat ``(n, d)`` data (partitioned across ``m`` machines
-here, padding the last shard with dead points when ``m`` does not divide
-``n``) or pre-sharded ``(m, p, d)`` — the latter is passed through
-untouched, so facade runs are bit-identical to the legacy per-algorithm
-drivers for the same PRNG key.
+``x`` is either flat ``(n, d)`` data (placed on ``m`` machines by
+``shard_policy`` — shuffled/contiguous/sorted/imbalanced, see
+``repro.data.sharding``) or pre-sharded ``(m, p, d)`` — the latter is
+passed through untouched, so facade runs are bit-identical to the legacy
+per-algorithm drivers for the same PRNG key.
+
+Run *conditions* are facade knobs too: ``uplink_dtype`` sets the
+machine->coordinator payload precision (quantized before the upload and
+accounted in ``ClusterResult.uplink_bytes``), and ``failure_plan``
+(a ``repro.ft.failures.FailurePlan``) injects machine deaths and
+straggler deadlines through the host loop's ``on_round`` hook.
 """
 from __future__ import annotations
 
@@ -23,31 +29,41 @@ from repro.api.registry import get_algorithm
 from repro.api.result import ClusterResult
 
 
-def _as_parts(x: np.ndarray, w, m: int, seed: int, shuffle: bool):
+def _as_parts(x: np.ndarray, w, m: int, seed: int, policy):
     """(n, d) -> ((m, p, d), (m, p) weights, (m, p) alive); 3-d passthrough."""
     if x.ndim == 3:
         return x, w, None
-    n, d = x.shape
-    w_flat = np.ones((n,), np.float32) if w is None else np.asarray(
-        w, np.float32)
-    idx = np.arange(n)
-    if shuffle:  # balanced shards irrespective of data order (cf. shard_points)
-        np.random.default_rng(seed).shuffle(idx)
-    p = -(-n // m)
-    pad = m * p - n
-    xs = np.concatenate(
-        [np.asarray(x, np.float32)[idx],
-         np.zeros((pad, d), np.float32)]).reshape(m, p, d)
-    ws = np.concatenate(
-        [w_flat[idx], np.zeros((pad,), np.float32)]).reshape(m, p)
-    alive = np.concatenate(
-        [np.ones((n,), bool), np.zeros((pad,), bool)]).reshape(m, p)
-    return xs, ws, alive
+    from repro.data.sharding import make_shards
+    return make_shards(x, w, m, policy=policy, seed=seed)
+
+
+def _check_plan_machines(plan, m: int):
+    """Validate every fail_at machine id up front — a bad id must fail
+    here, not as an IndexError rounds into the run."""
+    bad = sorted({j for ids in plan.fail_at.values() for j in ids
+                  if not 0 <= j < m})
+    if bad:
+        raise ValueError(
+            f"failure_plan names machine(s) {bad} but the data has m={m}")
+
+
+def _mask_failed_machines(parts, w, alive, ids):
+    """Zero out machines dead before round 1 (FailurePlan.fail_at[0])."""
+    m, p, _ = parts.shape
+    alive = (np.ones((m, p), bool) if alive is None
+             else np.array(alive, copy=True))
+    w = (np.ones((m, p), np.float32) if w is None
+         else np.array(w, np.float32, copy=True))
+    alive[list(ids)] = False
+    w[list(ids)] = 0.0
+    return w, alive
 
 
 def fit(x, k: int, algo: str = "soccer", backend="auto", *,
         m: Optional[int] = None, w=None, key: Optional[jax.Array] = None,
-        seed: int = 0, shuffle: bool = True, **algo_params) -> ClusterResult:
+        seed: int = 0, shuffle: bool = True, shard_policy=None,
+        uplink_dtype=None, failure_plan=None,
+        **algo_params) -> ClusterResult:
     """Cluster ``x`` into ``k`` groups with any registered algorithm.
 
     Args:
@@ -61,8 +77,18 @@ def fit(x, k: int, algo: str = "soccer", backend="auto", *,
         ignored for pre-sharded input.
       w: optional per-point weights, shaped like ``x`` minus the last axis.
       key: optional PRNG key (defaults to ``PRNGKey(seed)``).
-      seed: seed for the default key and the partitioning shuffle.
-      shuffle: shuffle flat input before sharding (balanced machines).
+      seed: seed for the default key and the shard placement.
+      shuffle: legacy knob — ``shuffle=False`` is ``shard_policy=
+        "contiguous"``; ignored when ``shard_policy`` is given.
+      shard_policy: how flat input lands on machines — "shuffle" |
+        "contiguous" | "sorted" | "imbalanced" or a callable (see
+        ``repro.data.sharding``); rejected for pre-sharded input.
+      uplink_dtype: machine->coordinator payload precision ("float32"
+        default, "bfloat16", "float16"); uploads are quantized and
+        ``uplink_bytes`` accounted at this width.
+      failure_plan: a ``repro.ft.failures.FailurePlan`` injecting machine
+        deaths / straggler deadlines (algorithms with an ``on_round``
+        hook only, i.e. SOCCER).
       **algo_params: algorithm-specific knobs (e.g. ``epsilon`` for
         soccer, ``rounds`` for kmeans_parallel); unknown names raise.
 
@@ -78,16 +104,47 @@ def fit(x, k: int, algo: str = "soccer", backend="auto", *,
             raise ValueError(
                 f"m={m} conflicts with pre-sharded x of {x.shape[0]} "
                 f"machines")
+        if shard_policy is not None:
+            raise ValueError(
+                "shard_policy only applies to flat (n, d) input; "
+                "pre-sharded (m, p, d) data is passed through untouched")
         m = x.shape[0]
     else:
         m = 8 if m is None else m
-    parts, w_parts, alive_parts = _as_parts(x, w, m, seed, shuffle)
+    policy = shard_policy if shard_policy is not None else (
+        "shuffle" if shuffle else "contiguous")
+    parts, w_parts, alive_parts = _as_parts(x, w, m, seed, policy)
 
-    bk = resolve_backend(backend, m)
+    bk = resolve_backend(backend, m, uplink_dtype=uplink_dtype)
     driver = get_algorithm(algo)
+
+    if failure_plan is not None:
+        if not getattr(driver, "supports_failure_plan", False):
+            raise TypeError(
+                f"fit(algo={algo!r}) does not support failure_plan — the "
+                f"algorithm has no per-round host hook; supported: "
+                f"algorithms registered with supports_failure_plan")
+        _check_plan_machines(failure_plan, m)
+        init_dead = failure_plan.initial_failures()
+        if init_dead:
+            w_parts, alive_parts = _mask_failed_machines(
+                parts, w_parts, alive_parts, init_dead)
+        algo_params["on_round"] = failure_plan.chain(
+            algo_params.get("on_round"))
+        if failure_plan.straggler_rate:
+            algo_params.setdefault("straggler_rate",
+                                   failure_plan.straggler_rate)
+
     t0 = time.perf_counter()
     res = driver(parts, k, backend=bk, key=key, w=w_parts,
                  alive=alive_parts, seed=seed, **algo_params)
     res.wall_time_s = time.perf_counter() - t0
     res.params = dict(k=k, m=m, seed=seed, **algo_params)
+    if shard_policy is not None:
+        res.params["shard_policy"] = getattr(policy, "__name__", policy)
+    if uplink_dtype is not None:
+        res.params["uplink_dtype"] = bk.uplink_dtype
+    if failure_plan is not None:
+        res.params["failure_plan"] = failure_plan
+        res.params.pop("on_round", None)
     return res

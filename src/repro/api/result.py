@@ -8,14 +8,22 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def dtype_itemsize(dtype) -> int:
+    """Bytes per element; accepts numpy dtypes plus "bfloat16" (which
+    numpy only knows once jax's ml_dtypes registration is imported)."""
+    if str(dtype) == "bfloat16":
+        return np.dtype(jnp.bfloat16).itemsize
+    return np.dtype(dtype).itemsize
+
+
 def uplink_bytes(points, d: int, dtype=np.float32) -> np.ndarray:
     """Communication volume of ``points`` uploaded d-dim rows, in bytes.
 
     Dtype-aware so the paper's uplink comparison stays meaningful for
-    reduced-precision variants (e.g. a future bf16 upload path).
+    reduced-precision uploads (``fit(..., uplink_dtype="bfloat16")``).
     """
     pts = np.asarray(points, np.int64)
-    return pts * int(d) * np.dtype(dtype).itemsize
+    return pts * int(d) * dtype_itemsize(dtype)
 
 
 @dataclasses.dataclass

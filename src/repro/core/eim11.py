@@ -80,6 +80,7 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
     w = backend.put(w, "machine")
     alive_dev = backend.put(alive0, "machine")
     cap = min(p, s)
+    uplink_dtype = getattr(backend, "uplink_dtype", "float32")
     rows = max_rounds * s
     key = jax.random.PRNGKey(seed) if key is None else key
 
@@ -87,8 +88,10 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
         n_local = jnp.sum(alive, axis=1).astype(jnp.int32)
         n_vec = comm.all_machines(n_local)
         k1, k2 = jax.random.split(kk)
-        s1, _, r1 = draw_global_sample(comm, k1, x, w, alive, n_vec, s, cap)
-        s2, w2, r2 = draw_global_sample(comm, k2, x, w, alive, n_vec, s, cap)
+        s1, _, r1 = draw_global_sample(comm, k1, x, w, alive, n_vec, s,
+                                       cap, upload_dtype=uplink_dtype)
+        s2, w2, r2 = draw_global_sample(comm, k2, x, w, alive, n_vec, s,
+                                        cap, upload_dtype=uplink_dtype)
         # coordinator adds the whole first sample to the clustering
         centers = jax.lax.dynamic_update_slice(centers, s1, (base, 0))
         row_ids = jnp.arange(rows)
@@ -107,7 +110,8 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
         n_vec = comm.all_machines(n_local)
         kf1, kf2 = jax.random.split(kk)
         v_pts, v_w, real = draw_global_sample(comm, kf1, x, w, alive, n_vec,
-                                              s, cap)
+                                              s, cap,
+                                              upload_dtype=uplink_dtype)
         c_fin, _ = kmeans(kf2, v_pts, v_w, k)
         centers = jax.lax.dynamic_update_slice(centers, c_fin, (base, 0))
         row_ids = jnp.arange(rows)

@@ -26,7 +26,7 @@ import numpy as np
 from repro.core.metrics import assignment_counts
 from repro.core.reduce import reduce_to_k
 from repro.core.sampling import (exclusive_cumsum, global_weighted_choice,
-                                 scatter_at)
+                                 quantize_uplink, scatter_at)
 from repro.kernels import ops
 
 
@@ -39,7 +39,8 @@ class KMeansParallelResult:
     selected_hist: np.ndarray    # points added per round
 
 
-def _one_round(comm, l: float, cap: int, key, x, w, centers, valid, base):
+def _one_round(comm, l: float, cap: int, upload_dtype: str,
+               key, x, w, centers, valid, base):
     """One k-means‖ oversampling round; writes into rows [base, base+cap)."""
     d2 = jax.vmap(lambda xx: ops.min_dist(xx, centers, valid)[0])(x)
     phi = comm.psum(jnp.sum(w * d2, axis=1))
@@ -59,7 +60,8 @@ def _one_round(comm, l: float, cap: int, key, x, w, centers, valid, base):
     take = sel & (pos < base + cap)               # overflow beyond cap dropped
 
     ones = jnp.ones(x.shape[:2] + (1,), x.dtype)
-    vals = jnp.concatenate([x, ones], axis=-1)
+    vals = jnp.concatenate([quantize_uplink(x, upload_dtype), ones],
+                           axis=-1)
     buf = scatter_at(comm, vals, pos, take, centers.shape[0])
     new_centers = jnp.where(buf[:, -1:] > 0, buf[:, :-1], centers)
     new_valid = valid | (buf[:, -1] > 0)
@@ -100,7 +102,8 @@ def run_kmeans_parallel(x_parts: jax.Array, k: int, rounds: int, *,
     seed_fn = backend.compile(seed_init, ("rep", "machine", "machine"),
                               ("rep", "rep"))
     step = backend.compile(
-        functools.partial(_one_round, comm, l, cap),
+        functools.partial(_one_round, comm, l, cap,
+                          getattr(backend, "uplink_dtype", "float32")),
         ("rep", "machine", "machine", "rep", "rep", "rep"),
         ("rep", "rep", "rep", "rep"))
     counts_fn = backend.compile(

@@ -29,6 +29,20 @@ import jax.numpy as jnp
 from jax import lax
 
 
+def quantize_uplink(x: jax.Array, upload_dtype: str) -> jax.Array:
+    """Round an upload payload to the backend's uplink precision.
+
+    Applied machine-side just before the scatter-psum "upload", then
+    widened back to f32 so every coordinator computation keeps one
+    accumulation dtype; the precision loss (not the storage) is what the
+    condition models. The single definition every upload path shares —
+    new precisions (e.g. an int8 path via ft/compression) plug in here.
+    """
+    if upload_dtype == "float32":
+        return x
+    return x.astype(jnp.dtype(upload_dtype)).astype(jnp.float32)
+
+
 def apportion(counts: jax.Array, total: int) -> jax.Array:
     """Largest-remainder apportionment of ``total`` across machines.
 
@@ -130,13 +144,16 @@ def scatter_gather(comm, values: jax.Array, take: jax.Array,
 
 def draw_global_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
                        alive: jax.Array, n_vec_resp: jax.Array,
-                       total: int, cap: int):
+                       total: int, cap: int, upload_dtype: str = "float32"):
     """Exact-size global uniform sample with HT weights.
 
     Args:
       x: (local_m, p, d); w: (local_m, p) data weights; alive: (local_m, p).
       n_vec_resp: (m,) live counts of *responding* machines (0 = skipped).
       total: global sample size (static, e.g. η); cap: per-machine buffer.
+      upload_dtype: machine->coordinator payload precision; non-f32 rounds
+        the point coordinates before the scatter "upload" (HT weights ride
+        the metadata channel at full precision, like the count vector).
 
     Returns:
       pts (total, d), weights (total,) replicated; realized draw count.
@@ -147,7 +164,8 @@ def draw_global_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
     my_c, my_off = c_vec[ids], offs[ids]
     keys = jax.vmap(jax.random.fold_in, (None, 0))(key, ids)
     idx, take = jax.vmap(sample_local, (0, 0, 0, None))(keys, alive, my_c, cap)
-    pts = jnp.take_along_axis(x, idx[..., None], axis=1)
+    pts = quantize_uplink(jnp.take_along_axis(x, idx[..., None], axis=1),
+                          upload_dtype)
     w_pt = jnp.take_along_axis(w, idx, axis=1)
     n_local = jnp.sum(alive, axis=1).astype(jnp.float32)
     ht = n_local / jnp.maximum(my_c.astype(jnp.float32), 1.0)

@@ -59,10 +59,13 @@ class SoccerConstants:
                                         # farthest mass from the FINAL
                                         # clustering fit
     straggler_rate: float = 0.0
+    uplink_dtype: str = "float32"       # machine->coordinator payload
+                                        # precision (see api.backends)
 
 
 def derive_constants(n: int, p_local: int, params: SoccerParams,
-                     eta_override: int = 0, m: int = 0) -> SoccerConstants:
+                     eta_override: int = 0, m: int = 0,
+                     uplink_dtype: str = "float32") -> SoccerConstants:
     log_term = math.log(1.1 * params.k / (params.delta * params.epsilon))
     d_k = 6.5 * log_term
     k_plus = int(math.ceil(params.k + 9.0 * log_term))
@@ -82,7 +85,8 @@ def derive_constants(n: int, p_local: int, params: SoccerParams,
         sharded_threshold=params.sharded_threshold,
         sharded_seeding=params.sharded_seeding,
         outlier_frac=params.outlier_frac,
-        straggler_rate=params.straggler_rate)
+        straggler_rate=params.straggler_rate,
+        uplink_dtype=uplink_dtype)
 
 
 class SoccerState(NamedTuple):
@@ -134,7 +138,8 @@ def _draw_sample(comm, const: SoccerConstants, key: jax.Array,
                  n_vec_resp: jax.Array):
     """One exact-size global sample: ((eta, d) points, (eta,) HT weights)."""
     return draw_global_sample(comm, key, state.x, state.w, alive_eff,
-                              n_vec_resp, const.eta, const.cap)
+                              n_vec_resp, const.eta, const.cap,
+                              upload_dtype=const.uplink_dtype)
 
 
 def soccer_round(state: SoccerState, comm, const: SoccerConstants
@@ -284,7 +289,9 @@ def run_soccer(x_parts: jax.Array, params: SoccerParams, *,
     backend = resolve_backend(backend, m)
     comm = backend.make_comm(m)
     n = effective_n(m, p, w, alive)
-    const = derive_constants(n, p, params, eta_override, m=m)
+    const = derive_constants(
+        n, p, params, eta_override, m=m,
+        uplink_dtype=getattr(backend, "uplink_dtype", "float32"))
     key = jax.random.PRNGKey(params.seed) if key is None else key
     state = init_state(jnp.asarray(x_parts), const, key, w=w, alive=alive)
     state = backend.put(state, STATE_MARKS)

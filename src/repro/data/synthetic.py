@@ -1,13 +1,15 @@
 """Synthetic datasets mirroring the paper's §8 experiments.
 
 k-spherical-Gaussian mixtures in R^dim with Zipf(γ) component weights
-(the paper: dim=15, σ=0.001, γ=1.5, means uniform in the unit cube), plus
-the Theorem 7.2 adversarial instance for k-means‖ (Bachem et al. 2017a):
-x_1 duplicated (k-1)·z times, x_2..x_k singletons duplicated z times.
+(the paper: dim=15, σ=0.001, γ=1.5, means uniform in the unit cube), the
+Theorem 7.2 adversarial instance for k-means‖ (Bachem et al. 2017a), and
+the scenario-lab generators that stress what the Gaussian mixture does
+not: heavy tails, gross outliers, and extreme duplicate imbalance.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import warnings
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -28,28 +30,110 @@ def gaussian_mixture(spec: GaussianMixtureSpec
 
 
 def shard_points(x: np.ndarray, m: int, seed: int = 0,
-                 shuffle: bool = True) -> np.ndarray:
-    """Partition (n, d) -> (m, n//m, d) (drops the remainder, like a real
-    ingestion pipeline padding to equal shards)."""
-    n = (x.shape[0] // m) * m
+                 shuffle: bool = True, return_weights: bool = False):
+    """Partition (n, d) -> (m, ceil(n/m), d); no point is ever dropped.
+
+    When ``m`` does not divide ``n``, the last ``m*p - n`` slots are
+    padded with duplicates of randomly chosen points (and a warning is
+    issued): every original point is present, at the price of < m
+    double-counted rows. Callers that need exact mass pass
+    ``return_weights=True`` and get ``(parts, w)`` where the duplicate
+    padding rows carry weight 0 — feed ``w`` to ``fit(..., w=w)`` or the
+    core drivers. (Historical behavior silently *dropped* the ``n % m``
+    remainder, which loses up to m-1 real points.)
+    """
+    n = x.shape[0]
+    p = -(-n // m)
+    pad = m * p - n
+    rng = np.random.default_rng(seed)
     idx = np.arange(n)
     if shuffle:
-        np.random.default_rng(seed).shuffle(idx)
-    return x[idx].reshape(m, n // m, x.shape[1])
+        rng.shuffle(idx)
+    if pad:
+        warnings.warn(
+            f"shard_points: n={n} not divisible by m={m}; padding the last "
+            f"shard with {pad} duplicate point(s) (weight 0 when "
+            f"return_weights=True)", stacklevel=2)
+        idx = np.concatenate([idx, rng.choice(idx, size=pad, replace=False)])
+    parts = x[idx].reshape(m, p, x.shape[1])
+    if not return_weights:
+        return parts
+    w = np.ones((m * p,), np.float32)
+    if pad:
+        w[n:] = 0.0
+    return parts, w.reshape(m, p)
 
 
 def kmeans_parallel_hard_instance(k: int, z: int, dim: int = 2,
-                                  spread: float = 100.0, seed: int = 3
+                                  spread: float = 100.0, seed: int = 3,
+                                  sigma: float = 0.0,
+                                  heavy_factor: Optional[int] = None
                                   ) -> np.ndarray:
     """Theorem 7.2 / Bachem et al. hard instance, duplicated z times.
 
-    k distinct, far-apart locations; location 1 carries (k-1)·z copies and
-    each of the others z copies. k-means‖ needs ~k-1 rounds here; SOCCER's
-    P1 w.h.p. contains every distinct point, so OPT(P1)=0 and one round
-    removes everything.
+    k distinct, far-apart locations; location 1 carries ``heavy_factor·z``
+    copies (paper: heavy_factor = k-1, so one location holds half the
+    mass) and each of the others z copies. k-means‖'s per-round selection
+    probability l·d²/φ is diluted by the duplicate mass, so it misses a
+    constant fraction of the light locations every round and needs ~k-1
+    rounds; SOCCER's uniform P1 w.h.p. contains every distinct location,
+    so OPT(P1)≈0 and one round removes everything.
+
+    ``sigma > 0`` jitters every copy (as a fraction of ``spread``) so
+    clustering costs are strictly positive and cost *ratios* stay
+    well-defined; the round-count gap is unchanged.
     """
     rng = np.random.default_rng(seed)
     locs = rng.normal(0.0, spread, size=(k, dim)).astype(np.float32)
     reps = np.full((k,), z, np.int64)
-    reps[0] = (k - 1) * z
-    return np.repeat(locs, reps, axis=0)
+    reps[0] = (k - 1 if heavy_factor is None else heavy_factor) * z
+    x = np.repeat(locs, reps, axis=0)
+    if sigma > 0.0:
+        x = x + rng.normal(0.0, sigma * spread,
+                           size=x.shape).astype(np.float32)
+    return x.astype(np.float32)
+
+
+def heavy_tailed_mixture(n: int, k: int = 10, dim: int = 12,
+                         df: float = 2.0, scale_spread: float = 1.5,
+                         seed: int = 5
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Student-t mixture with per-cluster log-uniform scales (KDD-like).
+
+    ``df`` ~ 2 gives infinite-variance tails: a constant fraction of the
+    mass sits far from every mean, which is exactly the regime where the
+    paper's Table-3 rows need multiple SOCCER rounds (each round's
+    threshold peels the dense core, the tail survives to the next).
+
+    Returns (x, labels, means) like ``gaussian_mixture``.
+    """
+    rng = np.random.default_rng(seed)
+    means = rng.uniform(0.0, 1000.0, size=(k, dim)).astype(np.float32)
+    scales = 10.0 ** rng.uniform(-scale_spread, scale_spread, size=(k, 1))
+    weights = np.arange(1, k + 1, dtype=np.float64) ** (-1.5)
+    weights /= weights.sum()
+    labels = rng.choice(k, size=n, p=weights).astype(np.int32)
+    noise = rng.standard_t(df, size=(n, dim)) * scales[labels]
+    return ((means[labels] + noise).astype(np.float32), labels, means)
+
+
+def contaminate(x: np.ndarray, frac: float = 0.01, scale: float = 50.0,
+                seed: int = 7) -> Tuple[np.ndarray, np.ndarray]:
+    """Inject gross outliers: returns (x_contaminated, inlier_mask).
+
+    Outliers are drawn isotropically at ``scale`` times the data's RMS
+    radius and appended, then the array is shuffled; ``inlier_mask``
+    marks the original points (evaluate cost on ``x[mask]`` to measure
+    robustness the way tests/test_ft.py does).
+    """
+    rng = np.random.default_rng(seed)
+    n, d = x.shape
+    n_out = max(int(round(frac * n)), 1)
+    radius = float(np.sqrt(np.mean(np.sum(
+        (x - x.mean(axis=0)) ** 2, axis=1))))
+    outliers = x.mean(axis=0) + rng.normal(
+        0.0, scale * max(radius, 1e-6), size=(n_out, d))
+    x_all = np.concatenate([x, outliers.astype(np.float32)])
+    mask = np.concatenate([np.ones((n,), bool), np.zeros((n_out,), bool)])
+    order = rng.permutation(n + n_out)
+    return x_all[order], mask[order]

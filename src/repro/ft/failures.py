@@ -20,13 +20,65 @@ persists round boundaries; restore is elastic across machine counts via
 """
 from __future__ import annotations
 
-from typing import Sequence
+import dataclasses
+from typing import Mapping, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.soccer import SoccerState
+
+
+@dataclasses.dataclass(frozen=True)
+class FailurePlan:
+    """Declarative failure/straggler injection for ``fit(...)``.
+
+    ``fail_at`` maps a communication-round index to the machine ids that
+    die right after that round completes (round 0 = before the first
+    round — the shard is lost for the whole run). ``straggler_rate`` is
+    the per-round probability that a machine misses the *sampling*
+    deadline; stragglers still receive the broadcast and perform removal,
+    so no straggler data is ever lost (cf. the module docstring).
+
+    The facade turns the plan into SOCCER's ``on_round`` hook plus the
+    ``straggler_rate`` param — ``fit(x, k, failure_plan=FailurePlan(
+    fail_at={1: (2, 5)}, straggler_rate=0.3))``.
+    """
+    fail_at: Mapping[int, Tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)
+    straggler_rate: float = 0.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.straggler_rate < 1.0:
+            raise ValueError(
+                f"FailurePlan.straggler_rate must be in [0, 1), got "
+                f"{self.straggler_rate}")
+        for r, ids in self.fail_at.items():
+            if r < 0 or not len(tuple(ids)):
+                raise ValueError(
+                    f"FailurePlan.fail_at: round {r} -> {ids!r} (rounds "
+                    f"must be >= 0 and machine lists non-empty)")
+
+    def initial_failures(self) -> Tuple[int, ...]:
+        """Machines dead before round 1 (the ``fail_at[0]`` entry)."""
+        return tuple(self.fail_at.get(0, ()))
+
+    def on_round(self, round_idx: int, state: SoccerState) -> SoccerState:
+        """SOCCER host-loop hook: apply this round's failures, if any."""
+        ids = self.fail_at.get(round_idx)
+        return state if not ids else fail_machines(state, ids)
+
+    def chain(self, other):
+        """Compose with a user ``on_round`` hook (failures apply first)."""
+        if other is None:
+            return self.on_round
+
+        def hook(round_idx, state):
+            state = self.on_round(round_idx, state)
+            return other(round_idx, state) or state
+
+        return hook
 
 
 def fail_machines(state: SoccerState, ids: Sequence[int]) -> SoccerState:

@@ -1,0 +1,28 @@
+"""Scenario lab: pluggable dataset/condition registry + sweep runner.
+
+    from repro.scenarios import list_scenarios, run_sweep
+    rows = run_sweep(list_scenarios(tag="paper"), quick=True)
+
+Scenarios bundle a data generator, a shard-placement policy, and run
+conditions (failures, stragglers, uplink precision) into one named spec;
+the sweep drives every registered ``repro.api.fit`` algorithm through
+them and emits one comparable report row per cell. Register new ones
+with ``@register_scenario`` (see ``repro.scenarios.registry``); the CLI
+is ``python -m repro.scenarios.run --suite paper --quick``.
+"""
+from repro.scenarios.registry import (Condition, Scenario, ScenarioData,
+                                      get_scenario, list_scenarios,
+                                      register_scenario)
+from repro.scenarios.report import (format_table, summarize_gap,
+                                    write_bench_json)
+from repro.scenarios.sweep import (DEFAULT_ALGOS, exact_baseline,
+                                   run_scenario, run_sweep)
+from repro.scenarios import library as _library  # noqa: F401  (registers
+                                                 # the built-in scenarios)
+
+__all__ = [
+    "Condition", "DEFAULT_ALGOS", "Scenario", "ScenarioData",
+    "exact_baseline", "format_table", "get_scenario", "list_scenarios",
+    "register_scenario", "run_scenario", "run_sweep", "summarize_gap",
+    "write_bench_json",
+]

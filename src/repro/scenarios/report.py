@@ -1,0 +1,76 @@
+"""Report formatting for scenario sweeps: one aligned table + BENCH json.
+
+The JSON artifact (``BENCH_scenarios*.json``) is the perf-trajectory
+record CI uploads nightly; its ``rows`` match the printed table cell for
+cell so regressions are diffable across commits.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Optional, Sequence
+
+_COLUMNS = (
+    ("scenario", 22), ("algo", 16), ("condition", 16), ("cost_ratio", 10),
+    ("rounds", 6), ("uplink_pts", 10), ("uplink_MB", 9), ("time_s", 7),
+)
+
+
+def _fmt(row: dict) -> Sequence[str]:
+    if row.get("skipped"):
+        return (row["scenario"], row["algo"], row["condition"],
+                "—", "—", "—", "—", "—")
+    return (
+        row["scenario"], row["algo"], row["condition"],
+        f"{row['cost_ratio']:.3f}",
+        str(row["rounds"]),
+        str(row["uplink_points"]),
+        f"{row['uplink_bytes'] / 1e6:.3f}",
+        f"{row['wall_time_s']:.2f}",
+    )
+
+
+def format_table(rows: Sequence[dict]) -> str:
+    header = [name for name, _ in _COLUMNS]
+    widths = [w for _, w in _COLUMNS]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(header, widths)),
+             "  ".join("-" * w for w in widths)]
+    for row in rows:
+        cells = _fmt(row)
+        lines.append("  ".join(str(c).ljust(w)
+                               for c, w in zip(cells, widths)))
+    return "\n".join(lines)
+
+
+def summarize_gap(rows: Sequence[dict]) -> Optional[str]:
+    """The adversarial-scenario headline: SOCCER rounds vs k-means‖
+    rounds-to-match (None when the sweep did not run that scenario)."""
+    adv = [r for r in rows if r["scenario"] == "adversarial_kmeanspar"
+           and not r.get("skipped")]
+    soccer = next((r for r in adv if r["algo"] == "soccer"), None)
+    kp = next((r for r in adv if r["algo"] == "kmeans_parallel"), None)
+    if not (soccer and kp):
+        return None
+    matched = ("" if kp.get("rounds_matched_target", True)
+               else f" (cost never matched within {kp['rounds']} rounds)")
+    return (f"adversarial gap: SOCCER {soccer['rounds']} round(s) vs "
+            f"k-means|| {kp['rounds']} round(s) to match cost{matched}")
+
+
+def write_bench_json(rows: Sequence[dict], path, *, suite: str,
+                     quick: bool, algos: Sequence[str],
+                     seed: int) -> pathlib.Path:
+    path = pathlib.Path(path)
+    payload = {
+        "kind": "scenario_sweep",
+        "suite": suite,
+        "quick": quick,
+        "algos": list(algos),
+        "seed": seed,
+        "unix_time": int(time.time()),
+        "gap": summarize_gap(rows),
+        "rows": list(rows),
+    }
+    path.write_text(json.dumps(payload, indent=1, default=str))
+    return path

@@ -1,0 +1,150 @@
+"""The sweep runner: scenarios x algorithms x conditions through fit().
+
+One report row per cell, all with the same columns so the output is one
+comparable table (the paper's Tables 2/3 become two slices of it):
+
+* ``cost``        — k-means cost of the returned centers on the
+                    scenario's evaluation set (inliers where the
+                    scenario defines them);
+* ``cost_ratio``  — cost / exact-k-means baseline cost. The baseline is
+                    a centralized k-means++ + Lloyd run on the full
+                    (unsharded) data — the "single machine with enough
+                    memory" reference every distributed run is judged
+                    against;
+* ``rounds``      — realized communication rounds (for ``match_rounds``
+                    scenarios, k-means‖ reports the smallest round count
+                    whose cost matches same-condition SOCCER, the paper's
+                    Table-3 protocol);
+* ``uplink_points`` / ``uplink_bytes`` — realized machine->coordinator
+                    upload (bytes are uplink-dtype aware);
+* ``wall_time_s`` — end-to-end fit() wall time.
+
+Cells whose condition an algorithm cannot honor (e.g. ``failure_plan``
+without an ``on_round`` hook) are reported with ``skipped=True`` instead
+of silently running unconditioned.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api import fit
+from repro.scenarios.registry import Condition, Scenario, get_scenario
+
+DEFAULT_ALGOS: Tuple[str, ...] = ("soccer", "kmeans_parallel")
+
+# Stringify fit kwargs for the report (FailurePlan and callables are not
+# JSON); keep short so the table stays readable.
+def _describe_params(params: dict) -> dict:
+    out = {}
+    for name, v in params.items():
+        out[name] = v if isinstance(v, (int, float, str, bool)) else repr(v)
+    return out
+
+
+def _cell(scenario: Scenario, algo: str, condition: Condition,
+          quick: bool, seed: int, backend, data, k: int,
+          match_cost: Optional[float], base_cost: float) -> dict:
+    """Run one scenario x algo x condition cell and summarize it."""
+    params = scenario.params_for(algo, condition, quick)
+    row = dict(scenario=scenario.name, algo=algo, condition=condition.name,
+               k=k, m=scenario.m, note=condition.note,
+               params=_describe_params(params), skipped=False)
+    if condition.algos is not None and algo not in condition.algos:
+        row.update(skipped=True,
+                   note=f"condition restricted to {condition.algos}")
+        return row
+
+    eval_x = data.eval_x()
+    eval_w = data.w
+    if eval_w is not None and data.eval_mask is not None:
+        eval_w = eval_w[data.eval_mask]
+
+    def run(extra=None) -> Tuple[object, float]:
+        res = fit(data.x, k, algo=algo, backend=backend, m=scenario.m,
+                  w=data.w, seed=seed,
+                  shard_policy=scenario.shard_policy,
+                  **{**params, **(extra or {})})
+        return res, float(res.cost(eval_x, eval_w))
+
+    if (scenario.match_rounds and algo == "kmeans_parallel"
+            and match_cost is not None):
+        # Table-3 protocol: grow rounds until cost matches SOCCER's
+        # (the baseline cost joins the target so instances whose optimum
+        # sits at the numerical noise floor still have a sane target).
+        target = scenario.match_tol * max(match_cost, base_cost)
+        res = cost = None
+        matched = False
+        for r in range(1, scenario.max_match_rounds + 1):
+            res, cost = run({"rounds": r})
+            if cost <= target:
+                matched = True
+                break
+        row["rounds_matched_target"] = matched
+    else:
+        res, cost = run()
+
+    row.update(
+        cost=cost, cost_ratio=cost / max(base_cost, 1e-30),
+        rounds=int(res.rounds),
+        centers=int(res.centers.shape[0]),
+        uplink_points=int(res.uplink_points_total),
+        uplink_bytes=int(res.uplink_bytes_total),
+        wall_time_s=float(res.wall_time_s))
+    if res.n_hist is not None:
+        row["n_hist"] = [int(v) for v in np.asarray(res.n_hist)]
+    return row
+
+
+def exact_baseline(data, k: int, seed: int, iters: int,
+                   restarts: int = 3) -> float:
+    """Exact-k-means reference: centralized k-means++ + Lloyd on the
+    *evaluation* set (inliers, where the scenario defines them — the
+    oracle a robust distributed run is judged against), best of a few
+    seeds so one bad seeding does not skew every ratio in the row."""
+    eval_x = data.eval_x()
+    w = data.w
+    if w is not None and data.eval_mask is not None:
+        w = w[data.eval_mask]
+    costs = []
+    for s in range(restarts):
+        res = fit(eval_x, k, algo="lloyd", backend="virtual", m=1,
+                  w=w, seed=seed + s, iters=iters)
+        costs.append(float(res.cost(eval_x, w)))
+    return min(costs)
+
+
+def run_scenario(scenario: Scenario, algos: Sequence[str] = DEFAULT_ALGOS,
+                 quick: bool = True, seed: int = 0,
+                 backend="virtual") -> list:
+    """All algo x condition cells of one scenario (SOCCER cells first, so
+    match_rounds cells have their cost target)."""
+    data = scenario.make_data(quick)
+    k = scenario.k_for(quick)
+    base_cost = exact_baseline(data, k, seed, scenario.baseline_iters)
+    rows = []
+    ordered = sorted(algos, key=lambda a: a != "soccer")
+    soccer_cost = {}
+    for condition in scenario.conditions:
+        for algo in ordered:
+            row = _cell(scenario, algo, condition, quick, seed, backend,
+                        data, k, soccer_cost.get(condition.name), base_cost)
+            row["baseline_cost"] = base_cost
+            if algo == "soccer" and not row["skipped"]:
+                soccer_cost[condition.name] = row["cost"]
+            rows.append(row)
+    return rows
+
+
+def run_sweep(names: Sequence[str], algos: Sequence[str] = DEFAULT_ALGOS,
+              quick: bool = True, seed: int = 0, backend="virtual",
+              verbose: bool = True) -> list:
+    rows = []
+    for name in names:
+        scenario = get_scenario(name)
+        if verbose:
+            print(f"# scenario {name}: {scenario.summary}", flush=True)
+        rows.extend(run_scenario(scenario, algos=algos, quick=quick,
+                                 seed=seed, backend=backend))
+    return rows

@@ -1,15 +1,18 @@
-"""Fault tolerance: machine failures, stragglers, gradient compression."""
+"""Fault tolerance: machine failures, stragglers, gradient compression —
+both the core mechanisms and their ``fit(..., failure_plan=...)`` facade."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.api import fit
 from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
 from repro.core.comm import VirtualCluster
 from repro.core.metrics import centralized_cost
 from repro.core.soccer import run_soccer
 from repro.data.synthetic import gaussian_mixture, shard_points
 from repro.ft.compression import compressed_psum, init_error_feedback
-from repro.ft.failures import fail_machines, surviving_fraction
+from repro.ft.failures import FailurePlan, fail_machines, surviving_fraction
 
 M = 8
 
@@ -66,6 +69,78 @@ def test_stragglers_do_not_break_rounds():
     ref = float(centralized_cost(xg, jnp.asarray(means)))
     assert res.rounds <= res.const.max_rounds
     assert cost <= 4.0 * ref
+
+
+def test_failure_plan_through_facade_degrades_gracefully():
+    """fit(failure_plan=...) — machines die before the run (round 0) and
+    mid-run; cost degrades with the lost mass, never catastrophically."""
+    x, means = _data()
+    xg = jnp.asarray(x)
+    ref = float(centralized_cost(xg, jnp.asarray(means)))
+    ok = fit(x, 6, algo="soccer", backend="virtual", m=M, epsilon=0.1,
+             seed=0)
+    for plan in (FailurePlan(fail_at={0: (2, 5)}),
+                 FailurePlan(fail_at={1: (2,), 2: (5,)})):
+        res = fit(x, 6, algo="soccer", backend="virtual", m=M,
+                  epsilon=0.1, seed=0, eta_override=900, failure_plan=plan)
+        cost = float(res.cost(xg))
+        assert cost <= 4.0 * max(float(ok.cost(xg)), ref), plan
+        assert res.params["failure_plan"] is plan
+        assert "on_round" not in res.params
+
+
+def test_failure_plan_round0_masks_shards():
+    """Round-0 failures are applied before the first round: the dead
+    machines' mass is excluded from every count the coordinator sees."""
+    x, _ = _data()
+    plan = FailurePlan(fail_at={0: (1, 3, 6)})
+    res = fit(x, 6, algo="soccer", backend="virtual", m=M, epsilon=0.1,
+              seed=0, failure_plan=plan)
+    n = x.shape[0]
+    # n_hist[0] counts only the 5/8 surviving machines' points
+    expected = n - sum(np.bincount(np.arange(n) % M, minlength=M)[[1, 3, 6]])
+    assert abs(int(res.n_hist[0]) - expected) <= M  # shard-size rounding
+    state = res.extra["state"]
+    assert not np.asarray(state.alive)[[1, 3, 6]].any()
+
+
+def test_straggler_plan_never_loses_data():
+    """Stragglers miss the *sampling* deadline only: every machine stays
+    ok, its points keep being counted, and removal still reaches it —
+    so the live count the coordinator sees starts at the full n and the
+    run's quality holds."""
+    x, means = _data()
+    xg = jnp.asarray(x)
+    seen = []
+    plan = FailurePlan(straggler_rate=0.4)
+    res = fit(x, 6, algo="soccer", backend="virtual", m=M, epsilon=0.1,
+              seed=1, eta_override=900, failure_plan=plan,
+              on_round=lambda r, s: seen.append(
+                  int(jnp.sum(s.alive & s.machine_ok[:, None]))) or None)
+    state = res.extra["state"]
+    assert bool(np.asarray(state.machine_ok).all())   # nobody was killed
+    assert int(res.n_hist[0]) == x.shape[0]           # all data counted
+    assert res.rounds >= 1 and len(seen) == res.rounds
+    # straggler machines still performed removal: the live count strictly
+    # dropped on every machine group, not just responders
+    alive_per_machine = np.asarray(state.alive).sum(axis=1)
+    assert (alive_per_machine < x.shape[0] // M).all()
+    ref = float(centralized_cost(xg, jnp.asarray(means)))
+    assert float(res.cost(xg)) <= 4.0 * ref
+
+
+def test_failure_plan_validation_and_unsupported_algo():
+    x = np.zeros((256, 3), np.float32)
+    with pytest.raises(ValueError, match="straggler_rate"):
+        FailurePlan(straggler_rate=1.0)
+    with pytest.raises(ValueError, match="fail_at"):
+        FailurePlan(fail_at={-1: (0,)})
+    with pytest.raises(TypeError, match="failure_plan"):
+        fit(x, 2, algo="kmeans_parallel", m=4, rounds=1,
+            failure_plan=FailurePlan(fail_at={1: (0,)}))
+    with pytest.raises(ValueError, match="m=4"):
+        fit(x, 2, algo="soccer", m=4,
+            failure_plan=FailurePlan(fail_at={0: (7,)}))
 
 
 def test_topk_compression_converges():

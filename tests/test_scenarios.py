@@ -1,0 +1,214 @@
+"""Scenario lab: registry, shard policies, sweep rows, the adversarial
+round gap, and the shard_points remainder regression."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import fit
+from repro.data.sharding import make_shards
+from repro.data.synthetic import (contaminate, heavy_tailed_mixture,
+                                  kmeans_parallel_hard_instance,
+                                  shard_points)
+from repro.scenarios import (Condition, Scenario, ScenarioData,
+                             get_scenario, list_scenarios,
+                             register_scenario, run_scenario, run_sweep,
+                             summarize_gap)
+
+REQUIRED = {"zipf_gaussian", "adversarial_kmeanspar", "heavy_tailed",
+            "outlier_contaminated", "imbalanced_shards", "noniid_shards",
+            "faulty_cluster", "bf16_uplink"}
+
+
+# ------------------------------------------------------------- registry
+def test_registry_well_formed():
+    names = set(list_scenarios(tag="paper"))
+    assert names >= REQUIRED
+    for name in names:
+        sc = get_scenario(name)
+        assert sc.summary and sc.k >= 1 and sc.m >= 1
+        assert sc.conditions, name
+        # every cell must resolve its fit() params without touching data
+        for cond in sc.conditions:
+            params = sc.params_for("soccer", cond, quick=True)
+            assert isinstance(params, dict)
+
+
+def test_registry_quick_data_shapes():
+    for name in sorted(REQUIRED):
+        sc = get_scenario(name)
+        data = sc.make_data(True)
+        n, d = data.x.shape
+        k = sc.k_for(True)
+        assert np.all(np.isfinite(data.x)), name
+        assert n >= 50 * k, (name, n, k)   # quick but not degenerate
+        if data.eval_mask is not None:
+            assert data.eval_mask.shape == (n,)
+            assert 0 < data.eval_mask.sum() < n
+
+
+def test_register_scenario_plugs_in():
+    @register_scenario
+    def _tiny():
+        return Scenario(
+            name="_test_tiny", summary="registration smoke",
+            make_data=lambda quick: ScenarioData(
+                x=np.random.default_rng(0).normal(
+                    size=(400, 3)).astype(np.float32)),
+            k=3, tags=("_test",))
+
+    assert "_test_tiny" in list_scenarios(tag="_test")
+    assert "_test_tiny" not in list_scenarios(tag="paper")
+    rows = run_scenario(get_scenario("_test_tiny"), algos=("lloyd",),
+                        quick=True)
+    assert len(rows) == 1 and rows[0]["cost_ratio"] > 0
+
+
+# ------------------------------------------------------- shard policies
+def test_shard_policies_preserve_mass():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(1003, 4)).astype(np.float32)
+    for policy in ("shuffle", "contiguous", "sorted", "imbalanced"):
+        parts, w, alive = make_shards(x, None, 8, policy=policy, seed=1)
+        assert parts.shape[0] == 8 and parts.shape[2] == 4
+        assert int(alive.sum()) == 1003, policy          # nothing dropped
+        assert w.sum() == pytest.approx(1003.0), policy  # no invented mass
+        assert np.all(w[~alive] == 0.0), policy
+        # every original point appears exactly once among live slots
+        live_pts = parts[alive]
+        assert np.allclose(np.sort(live_pts, axis=0), np.sort(x, axis=0),
+                           atol=0), policy
+
+
+def test_imbalanced_policy_is_skewed_sorted_is_noniid():
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, 4, size=2000)
+    x = (labels[:, None] * 10.0 + rng.normal(
+        size=(2000, 3))).astype(np.float32)
+    _, _, alive = make_shards(x, None, 8, policy="imbalanced", seed=0)
+    sizes = alive.sum(axis=1)
+    assert sizes.max() >= 3 * sizes.min()      # Zipf skew is real
+    parts, _, alive_s = make_shards(x, None, 4, policy="sorted", seed=0)
+    # non-IID: each sorted shard is dominated by one label's slab
+    for j in range(4):
+        lab = np.rint(parts[j][alive_s[j]][:, 0] / 10.0)
+        dominant = np.bincount(lab.astype(int), minlength=4).max()
+        assert dominant / alive_s[j].sum() > 0.9
+
+
+def test_make_shards_rejects_bad_inputs():
+    x = np.zeros((10, 2), np.float32)
+    with pytest.raises(ValueError, match="shard_policy"):
+        make_shards(x, None, 2, policy="zipfian")
+    with pytest.raises(ValueError, match="cannot place"):
+        make_shards(x, None, 11)
+
+
+def test_shard_points_remainder_regression():
+    """n % m points were silently dropped before the scenario lab."""
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(1001, 3)).astype(np.float32)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        parts, w = shard_points(x, 8, return_weights=True)
+    assert any("padding" in str(c.message) for c in caught)
+    assert parts.shape == (8, 126, 3)
+    # every original point is present (nothing dropped)...
+    flat = parts.reshape(-1, 3)
+    assert np.allclose(
+        np.sort(np.concatenate([x, flat[w.reshape(-1) == 0.0]]), axis=0),
+        np.sort(flat, axis=0))
+    # ...and the weight mask restores exact mass
+    assert w.sum() == pytest.approx(1001.0)
+    # divisible n: no warning, historical shape, all-ones weights
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        parts2, w2 = shard_points(x[:1000], 8, return_weights=True)
+    assert parts2.shape == (8, 125, 3) and np.all(w2 == 1.0)
+
+
+# ------------------------------------------------------------ the sweep
+@pytest.fixture(scope="module")
+def sweep_rows():
+    return run_sweep(["adversarial_kmeanspar", "bf16_uplink"],
+                     algos=("soccer", "kmeans_parallel"), quick=True,
+                     seed=0, verbose=False)
+
+
+def test_sweep_rows_have_report_columns(sweep_rows):
+    ran = [r for r in sweep_rows if not r["skipped"]]
+    assert len(ran) >= 6
+    for row in ran:
+        for col in ("scenario", "algo", "condition", "cost", "cost_ratio",
+                    "rounds", "uplink_points", "uplink_bytes",
+                    "wall_time_s", "baseline_cost"):
+            assert col in row, (row["scenario"], col)
+        assert row["cost"] >= 0 and np.isfinite(row["cost"])
+        assert row["uplink_bytes"] >= row["uplink_points"] * 2  # >=2B/dim
+
+
+def test_adversarial_gap_reproduced(sweep_rows):
+    """The paper's headline qualitative claim, as a regression test:
+    SOCCER needs fewer rounds than k-means|| at equal coordinator
+    memory on the Theorem 7.2 instance."""
+    adv = {r["algo"]: r for r in sweep_rows
+           if r["scenario"] == "adversarial_kmeanspar" and not r["skipped"]}
+    assert adv["kmeans_parallel"]["rounds_matched_target"]
+    assert adv["soccer"]["rounds"] < adv["kmeans_parallel"]["rounds"]
+    assert summarize_gap(sweep_rows) is not None
+
+
+def test_bf16_condition_halves_uplink_bytes(sweep_rows):
+    cells = {(r["condition"], r["algo"]): r for r in sweep_rows
+             if r["scenario"] == "bf16_uplink"}
+    for algo in ("soccer", "kmeans_parallel"):
+        fp32 = cells[("fp32_uplink", algo)]
+        bf16 = cells[("bf16_uplink", algo)]
+        assert (bf16["uplink_bytes"] / bf16["uplink_points"]
+                == fp32["uplink_bytes"] / fp32["uplink_points"] / 2), algo
+        # rounding the payload must not wreck the clustering
+        assert bf16["cost"] <= 3.0 * max(fp32["cost"],
+                                         fp32["baseline_cost"]), algo
+
+
+def test_condition_restriction_reports_skipped():
+    rows = run_scenario(get_scenario("faulty_cluster"),
+                        algos=("kmeans_parallel",), quick=True, seed=0)
+    by_cond = {r["condition"]: r for r in rows}
+    assert not by_cond["baseline"]["skipped"]
+    assert by_cond["stragglers"]["skipped"]
+    assert by_cond["hard_failure"]["skipped"]
+
+
+# ------------------------------------------------------------ new knobs
+def test_fit_uplink_dtype_accounting():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(2000, 6)).astype(np.float32)
+    res32 = fit(x, 4, algo="soccer", backend="virtual", m=4, seed=0,
+                epsilon=0.2)
+    res16 = fit(x, 4, algo="soccer", backend="virtual", m=4, seed=0,
+                epsilon=0.2, uplink_dtype="bfloat16")
+    assert np.array_equal(res32.uplink_bytes, res32.uplink_points * 6 * 4)
+    assert np.array_equal(res16.uplink_bytes, res16.uplink_points * 6 * 2)
+    assert res16.params["uplink_dtype"] == "bfloat16"
+    with pytest.raises(ValueError, match="uplink_dtype"):
+        fit(x, 4, algo="soccer", m=4, uplink_dtype="int8")
+
+
+def test_fit_shard_policy_validation():
+    x = np.zeros((64, 3), np.float32)
+    with pytest.raises(ValueError, match="shard_policy"):
+        fit(x, 2, algo="lloyd", m=4, shard_policy="zipfian")
+    with pytest.raises(ValueError, match="pre-sharded"):
+        fit(np.zeros((4, 16, 3), np.float32), 2, algo="lloyd",
+            shard_policy="sorted")
+
+
+def test_generators_basic_properties():
+    x = kmeans_parallel_hard_instance(k=6, z=40, dim=3, sigma=0.0, seed=0)
+    assert x.shape == (5 * 40 + 5 * 40, 3)
+    assert len(np.unique(x, axis=0)) == 6
+    xh, labels, means = heavy_tailed_mixture(n=3000, k=5, dim=4, seed=1)
+    assert xh.shape == (3000, 4) and means.shape == (5, 4)
+    xc, mask = contaminate(xh, frac=0.01, seed=2)
+    assert xc.shape[0] == 3030 and mask.sum() == 3000

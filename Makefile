@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all smoke bench-kernels bench scenarios lint
+.PHONY: test test-all test-kernels smoke bench-kernels bench scenarios lint
 
 smoke:           ## quickstart example + one fit() per registered algorithm
 	$(PYTHON) examples/quickstart.py
@@ -13,6 +13,10 @@ test: smoke      ## tier-1 fast suite (skips @pytest.mark.slow)
 
 test-all:        ## full tier-1 suite, fail-fast (ROADMAP verify command)
 	$(PYTHON) -m pytest -x -q
+
+test-kernels:    ## kernel conformance harness: oracle vs both backends
+	REPRO_KERNEL_BACKEND=ref $(PYTHON) -m pytest -q tests/test_kernel_conformance.py
+	REPRO_KERNEL_BACKEND=pallas $(PYTHON) -m pytest -q tests/test_kernel_conformance.py
 
 bench-kernels:   ## kernel micro-bench + roofline smoke (quick shapes)
 	$(PYTHON) -m benchmarks.run --only kernels --quick

@@ -18,9 +18,13 @@ import numpy as np
 
 from benchmarks.common import emit, save_json, timed
 from repro.kernels import ops
+from repro.kernels.tuning import chunk_sizes
 from repro.roofline import hw
 
 SHAPES = [(200_000, 128, 16), (200_000, 256, 64), (50_000, 1024, 128)]
+# EIM11-sized center sets: beyond _MAX_PALLAS_K, served by the chunked-K
+# kernels (the old oracle-fallback boundary)
+CHUNKED_SHAPES = [(100_000, 4096, 16), (50_000, 8192, 64)]
 QUICK_N = 20_000  # measured-array cap under --quick (analytic rows keep
                   # the nominal shapes — they are model, not measurement)
 
@@ -55,6 +59,30 @@ def analytic(kernel: str, n: int, k: int, d: int):
     elif kernel == "remove_below":
         flops = 2.0 * n * k * d
         bytes_hbm = 4.0 * (n * d + k * d) + 2.0 * n  # int8 alive in + out
+    elif kernel == "update_min_dist":
+        # k is the new-center block (1 for sequential D² seeding):
+        # reads x, w, d2, c; writes d2', mass — ONE sweep of x instead of
+        # a distance pass plus three (n,) re-reads (see seeding_* below)
+        flops = 2.0 * n * k * d + 2.0 * n
+        bytes_hbm = 4.0 * (n * d + 4 * n + k * d + 1)
+    elif kernel == "fused_assign_reduce_chunked":
+        # phase A streams x once (resident across center chunks, running
+        # min in VMEM scratch) but re-fetches each center chunk per point
+        # panel; phase B re-reads x/w/assign per center chunk for the
+        # resident-accumulator scatter
+        bn, bk = chunk_sizes(d)
+        nc = -(-k // bk)
+        np_ = -(-n // bn)
+        flops = 4.0 * n * k * d
+        bytes_hbm = 4.0 * (n * d * (1 + nc) + n * (1 + 2 * nc)
+                           + np_ * k * d + k * d + k + 1)
+    elif kernel == "remove_below_chunked":
+        # one x sweep (running min in VMEM scratch, never spilled);
+        # centers re-fetched per point panel
+        bn, _ = chunk_sizes(d)
+        np_ = -(-n // bn)
+        flops = 2.0 * n * k * d
+        bytes_hbm = 4.0 * (n * d + np_ * k * d) + 2.0 * n
     else:
         raise ValueError(kernel)
     t, bound = _roofline(flops, bytes_hbm)
@@ -89,6 +117,22 @@ def fused_vs_unfused(n, k, d):
             "roofline_speedup": unfused_t / fu_t}
 
 
+def seeding_fused_vs_unfused(n, d):
+    """One D²-seeding step, fused update_min_dist vs the unfused chain
+    (distance pass reading+writing (n,) state, then p = w*d2 and its sum
+    as separate (n,) passes)."""
+    fl, fu_b, fu_t, _ = analytic("update_min_dist", n, 1, d)
+    # unfused: distance pass (x, c in; d2' in+out) + p = w*d2 (2n in,
+    # n out) + mass reduction (n in)
+    unfused_b = 4.0 * (n * d + d + 2 * n) + 4.0 * 3 * n + 4.0 * n
+    unfused_t, _ = _roofline(fl, unfused_b)
+    return {"n": n, "d": d,
+            "unfused_hbm_bytes": unfused_b, "fused_hbm_bytes": fu_b,
+            "hbm_bytes_ratio": fu_b / unfused_b,
+            "unfused_roofline_s": unfused_t, "fused_roofline_s": fu_t,
+            "roofline_speedup": unfused_t / fu_t}
+
+
 def run(quick: bool = False):
     rows, comparisons = [], []
     for n, k, d in SHAPES:
@@ -106,6 +150,11 @@ def run(quick: bool = False):
         t, _ = timed(lambda: ops.fused_assign_reduce(x, w, c))
         rows.append(_row("fused_assign_reduce", n, k, d, t * n / n_meas, n_meas))
 
+        c1 = c[:1]
+        d2 = jnp.full((n_meas,), 1e9, jnp.float32)
+        t, _ = timed(lambda: ops.update_min_dist(x, w, c1, d2))
+        rows.append(_row("update_min_dist", n, 1, d, t * n / n_meas, n_meas))
+
         m = 8
         xm = x[: (n_meas // m) * m].reshape(m, -1, d)
         alive = jnp.ones(xm.shape[:2], bool)
@@ -119,7 +168,39 @@ def run(quick: bool = False):
              cmp["fused_roofline_s"] * 1e6,
              hbm_bytes_ratio=f"{cmp['hbm_bytes_ratio']:.3f}",
              roofline_speedup=f"{cmp['roofline_speedup']:.2f}x")
-    save_json("kernels", {"rows": rows, "fused_vs_unfused": comparisons})
+
+    seeding_cmps = []
+    for n, _, d in SHAPES:
+        scmp = seeding_fused_vs_unfused(n, d)
+        seeding_cmps.append(scmp)
+        emit(f"kernel/seeding_fused_vs_unfused/{n}x{d}",
+             scmp["fused_roofline_s"] * 1e6,
+             hbm_bytes_ratio=f"{scmp['hbm_bytes_ratio']:.3f}",
+             roofline_speedup=f"{scmp['roofline_speedup']:.2f}x")
+
+    # EIM11-sized center sets. Like every row in this file, cpu_wall_s
+    # times the XLA oracle path (on CPU `auto` resolves to ref — see the
+    # module docstring); the analytic columns model the chunked-K Pallas
+    # kernels these shapes dispatch to on TPU.
+    for n, k, d in CHUNKED_SHAPES:
+        n_meas = min(n, QUICK_N) if quick else n
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(n_meas, d)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+        w = jnp.ones((n_meas,), jnp.float32)
+        t, _ = timed(lambda: ops.fused_assign_reduce(x, w, c))
+        rows.append(_row("fused_assign_reduce_chunked", n, k, d,
+                         t * n / n_meas, n_meas))
+        m = 8
+        xm = x[: (n_meas // m) * m].reshape(m, -1, d)
+        alive = jnp.ones(xm.shape[:2], bool)
+        v = jnp.float32(float(d))
+        t, _ = timed(lambda: ops.remove_below(xm, c, alive, v))
+        rows.append(_row("remove_below_chunked", n, k, d,
+                         t * n / n_meas, n_meas))
+
+    save_json("kernels", {"rows": rows, "fused_vs_unfused": comparisons,
+                          "seeding_fused_vs_unfused": seeding_cmps})
     return rows
 
 

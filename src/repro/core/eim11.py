@@ -92,8 +92,11 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
                                        cap, upload_dtype=uplink_dtype)
         s2, w2, r2 = draw_global_sample(comm, k2, x, w, alive, n_vec, s,
                                         cap, upload_dtype=uplink_dtype)
-        # coordinator adds the whole first sample to the clustering
-        centers = jax.lax.dynamic_update_slice(centers, s1, (base, 0))
+        # coordinator adds the whole first sample to the clustering (the
+        # clustering buffer is broadcast DOWNlink, so it stays f32; only
+        # the uplink payload s1/s2 may arrive narrowed)
+        centers = jax.lax.dynamic_update_slice(
+            centers, s1.astype(jnp.float32), (base, 0))
         row_ids = jnp.arange(rows)
         valid = valid | ((row_ids >= base) & (row_ids < base + s))
         # quantile threshold from the second sample

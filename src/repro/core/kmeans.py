@@ -26,25 +26,32 @@ def _categorical(key: jax.Array, p: jax.Array) -> jax.Array:
 
 def kmeans_plusplus(key: jax.Array, x: jax.Array, w: jax.Array,
                     k: int) -> jax.Array:
-    """Weighted D²-seeding. Returns (k, d) initial centers."""
+    """Weighted D²-seeding. Returns (k, d) float32 initial centers.
+
+    Each seeding step is ONE fused sweep of ``x``
+    (kernels.ops.update_min_dist): the incremental min-d2 lowering
+    against the newly chosen center and the weighted sampling mass for
+    the next categorical draw come out of the same HBM read, instead of
+    an unfused distance pass plus (n,) re-reads per center. Accepts
+    bfloat16 points (reduced-precision uplink payloads) directly; centers
+    and all accumulation stay float32.
+    """
     n, d = x.shape
     k0, kseq = jax.random.split(key)
-    first = x[_categorical(k0, w)]
+    first = x[_categorical(k0, w)].astype(jnp.float32)
 
     def step(carry, kk):
         d2min, centers, i = carry
         c_new = centers[i - 1]
-        delta = x - c_new[None, :]
-        d2_new = jnp.sum(delta * delta, axis=-1)
-        d2min = jnp.minimum(d2min, d2_new)
+        d2min, mass = ops.update_min_dist(x, w, c_new[None, :], d2min)
         p = w * d2min
         # all-zero mass (every point on a center) -> fall back to uniform w
-        p = jnp.where(jnp.sum(p) > 0, p, w)
-        nxt = x[_categorical(kk, p)]
+        p = jnp.where(mass > 0, p, w)
+        nxt = x[_categorical(kk, p)].astype(jnp.float32)
         centers = centers.at[i].set(nxt)
         return (d2min, centers, i + 1), None
 
-    centers0 = jnp.zeros((k, d), x.dtype).at[0].set(first)
+    centers0 = jnp.zeros((k, d), jnp.float32).at[0].set(first)
     d2_init = jnp.full((n,), jnp.inf, jnp.float32)
     keys = jax.random.split(kseq, max(k - 1, 1))
     (_, centers, _), _ = lax.scan(
@@ -59,15 +66,16 @@ def lloyd(x: jax.Array, w: jax.Array, centers: jax.Array, iters: int,
     Each iteration (and the final cost) is ONE fused assign+reduce sweep of
     ``x`` (kernels.ops.fused_assign_reduce) instead of the classic
     min_dist + lloyd_reduce pair — half the HBM traffic on the memory-bound
-    small-k path, and the (n,) assignment never leaves VMEM.
+    small-k path, and the (n,) assignment never leaves VMEM. ``x`` may be
+    bfloat16; centers are carried in float32.
     """
+    centers = centers.astype(jnp.float32)
 
     def step(c, _):
         sums, counts, _ = ops.fused_assign_reduce(x, w, c)
         new = jnp.where(counts[:, None] > 0,
-                        sums / jnp.maximum(counts[:, None], 1e-30),
-                        c.astype(jnp.float32))
-        return new.astype(c.dtype), None
+                        sums / jnp.maximum(counts[:, None], 1e-30), c)
+        return new, None
 
     centers, _ = lax.scan(step, centers, None, length=iters)
     _, _, cost = ops.fused_assign_reduce(x, w, centers)

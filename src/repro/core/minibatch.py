@@ -22,7 +22,12 @@ from repro.kernels import ops
 def minibatch_kmeans(key: jax.Array, x: jax.Array, w: jax.Array, k: int,
                      batch: int = 1024, steps: int = 60
                      ) -> Tuple[jax.Array, jax.Array]:
-    """Returns ((k, d) centers, cost on the full weighted set)."""
+    """Returns ((k, d) float32 centers, cost on the full weighted set).
+
+    ``x`` may be bfloat16 (reduced-precision uplink payloads): seeding and
+    every fused assign-reduce step widen on load with f32 accumulators, so
+    the payload is never upcast-materialized.
+    """
     n, d = x.shape
     kinit, kloop = jax.random.split(key)
     centers = kmeans_plusplus(kinit, x[: min(n, 16 * k)], w[: min(n, 16 * k)], k)
@@ -46,4 +51,4 @@ def minibatch_kmeans(key: jax.Array, x: jax.Array, w: jax.Array, k: int,
     (centers, _), _ = lax.scan(step, (centers, jnp.zeros((k,), jnp.float32)),
                                keys)
     _, _, cost = ops.fused_assign_reduce(x, w, centers)
-    return centers.astype(x.dtype), cost
+    return centers, cost

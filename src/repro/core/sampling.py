@@ -32,15 +32,19 @@ from jax import lax
 def quantize_uplink(x: jax.Array, upload_dtype: str) -> jax.Array:
     """Round an upload payload to the backend's uplink precision.
 
-    Applied machine-side just before the scatter-psum "upload", then
-    widened back to f32 so every coordinator computation keeps one
-    accumulation dtype; the precision loss (not the storage) is what the
-    condition models. The single definition every upload path shares —
-    new precisions (e.g. an int8 path via ft/compression) plug in here.
+    Applied machine-side just before the scatter-psum "upload". The
+    result is returned IN the uplink dtype: the clustering kernels
+    (kernels/fused_lloyd) take bfloat16 points directly and widen on load
+    with float32 accumulators, so reduced-precision payloads are
+    clustered without an upcast materializing 2x the bytes. Call sites
+    that mix the payload into an f32 scatter channel promote it back —
+    the values are identical either way, only storage width differs. The
+    single definition every upload path shares — new precisions (e.g. an
+    int8 path via ft/compression) plug in here.
     """
     if upload_dtype == "float32":
         return x
-    return x.astype(jnp.dtype(upload_dtype)).astype(jnp.float32)
+    return x.astype(jnp.dtype(upload_dtype))
 
 
 def apportion(counts: jax.Array, total: int) -> jax.Array:
@@ -156,7 +160,10 @@ def draw_global_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
         the metadata channel at full precision, like the count vector).
 
     Returns:
-      pts (total, d), weights (total,) replicated; realized draw count.
+      pts (total, d) STORED in ``upload_dtype`` (the clustering kernels
+      consume bf16 payloads directly with f32 accumulators — see
+      kernels/fused_lloyd), weights (total,) f32, both replicated;
+      realized draw count.
     """
     ids = comm.machine_ids()
     c_vec = apportion(n_vec_resp, total)
@@ -171,7 +178,12 @@ def draw_global_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
     ht = n_local / jnp.maximum(my_c.astype(jnp.float32), 1.0)
     vals = jnp.concatenate([pts, (w_pt * ht[:, None])[..., None]], axis=-1)
     buf = scatter_gather(comm, vals, take, my_off, total)
-    return buf[:, :-1], buf[:, -1], jnp.sum(c_vec)
+    out = buf[:, :-1]
+    if upload_dtype != "float32":
+        # the scatter channel is jointly f32 (points + weight column);
+        # re-narrowing is exact — the values were already rounded above
+        out = out.astype(jnp.dtype(upload_dtype))
+    return out, buf[:, -1], jnp.sum(c_vec)
 
 
 def global_weighted_choice(key: jax.Array, comm, weights: jax.Array,

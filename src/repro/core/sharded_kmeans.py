@@ -57,7 +57,13 @@ def draw_local_sample(comm, key, x, w, alive, n_vec_resp, total: int,
 
 
 def distributed_kmeans_pp(key, comm, pts, ws, k: int) -> jax.Array:
-    """Weighted D²-seeding over sharded points -> replicated (k, d)."""
+    """Weighted D²-seeding over sharded points -> replicated (k, d).
+
+    Each step updates every machine's running min-d2 against the new
+    center AND totals the local sampling mass in one fused sweep of its
+    sample buffer (kernels.ops.update_min_dist); only the per-machine
+    scalar masses hit the collective.
+    """
     d = pts.shape[-1]
     k0, kseq = jax.random.split(key)
     first = global_weighted_choice(k0, comm, ws, pts)
@@ -65,10 +71,11 @@ def distributed_kmeans_pp(key, comm, pts, ws, k: int) -> jax.Array:
     def step(carry, kk):
         d2min, centers, i = carry
         c_new = centers[i - 1]
-        delta = pts - c_new[None, None, :]
-        d2min = jnp.minimum(d2min, jnp.sum(delta * delta, axis=-1))
+        d2min, local_mass = jax.vmap(
+            lambda xx, ww, dd: ops.update_min_dist(xx, ww, c_new[None, :],
+                                                   dd))(pts, ws, d2min)
         p = ws * d2min
-        mass = comm.psum(jnp.sum(p, axis=1))
+        mass = comm.psum(local_mass)
         p = jnp.where(mass > 0, p, ws)
         nxt = global_weighted_choice(kk, comm, p, pts)
         return (d2min, centers.at[i].set(nxt), i + 1), None
@@ -209,23 +216,28 @@ def distributed_kmeans_parallel_seed(key, comm, pts, ws, k: int,
     cand = cand.at[0, d].set(1.0)
     ids = comm.machine_ids()
 
+    def update_d2(centers_block, valid_block, d2):
+        """Lower the running min-d2 against newly added candidates only —
+        one fused sweep per machine (candidates are append-only, so the
+        incremental min equals a full recompute against the whole set)."""
+        return jax.vmap(
+            lambda xx, ww, dd: ops.update_min_dist(xx, ww, centers_block,
+                                                   dd, valid_block)[0]
+        )(pts, ws, d2)
+
+    d2 = update_d2(first[None, :], jnp.ones((1,), bool),
+                   jnp.full(pts.shape[:2], jnp.inf, jnp.float32))
+
     def body(carry, inp):
-        cand, key = carry
+        cand, d2, key = carry
         r = inp
         key, kr = jax.random.split(key)
-        centers = cand[:, :d]
-        valid = cand[:, d] > 0
-
-        def per_machine(xx, ww):
-            d2, _ = ops.min_dist(xx, centers, valid)
-            return d2 * (ww > 0)
-
-        d2 = jax.vmap(per_machine)(pts, ws)
         phi = comm.psum(jnp.sum(ws * d2, axis=1))
         prob = jnp.minimum(1.0, l * ws * d2 / jnp.maximum(phi, 1e-30))
         keys = jax.vmap(jax.random.fold_in, (None, 0))(kr, ids)
         sel = jax.vmap(lambda kk, p_: jax.random.uniform(kk, p_.shape) < p_
                        )(keys, prob)
+        sel = sel & (ws > 0)
         # scatter selected into this round's region (overflow dropped)
         c_local = jnp.sum(sel, axis=1).astype(jnp.int32)
         c_vec = comm.all_machines(c_local)
@@ -238,10 +250,12 @@ def distributed_kmeans_parallel_seed(key, comm, pts, ws, k: int,
         vals = jnp.concatenate([pts.astype(jnp.float32), ones], axis=-1)
         buf = scatter_at(comm, vals, pos, take, rows)
         cand = jnp.where(buf[:, d:] > 0, buf, cand)
-        return (cand, key), None
+        block = lax.dynamic_slice(cand, (1 + r * cap, 0), (cap, d + 1))
+        d2 = update_d2(block[:, :d], block[:, d] > 0, d2)
+        return (cand, d2, key), None
 
-    (cand, _), _ = lax.scan(body, (cand, key),
-                            jnp.arange(rounds, dtype=jnp.int32))
+    (cand, _, _), _ = lax.scan(body, (cand, d2, key),
+                               jnp.arange(rounds, dtype=jnp.int32))
     # weight candidates by assigned sample mass (one distributed pass)
     centers, valid = cand[:, :d], cand[:, d] > 0
 

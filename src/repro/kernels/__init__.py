@@ -4,15 +4,23 @@ Layout:
   * ``ops.py``         — the public dispatch layer. All algorithm code calls
     through here; backend selection (``auto`` | ``ref`` | ``pallas``) is
     controlled by the ``REPRO_KERNEL_BACKEND`` env var or an explicit
-    ``backend=`` argument. Entry points: ``min_dist``, ``lloyd_reduce``,
-    and the one-sweep fused pair ``fused_assign_reduce`` (Lloyd
-    assign+reduce+cost) and ``remove_below`` (SOCCER removal pass).
+    ``backend=`` argument. Entry points (``ops.ENTRY_POINTS``):
+    ``min_dist``, ``lloyd_reduce``, the one-sweep fused pair
+    ``fused_assign_reduce`` (Lloyd assign+reduce+cost) and
+    ``remove_below`` (SOCCER removal pass), and ``update_min_dist``
+    (D²-seeding incremental min-d2 + sampling mass). Center sets beyond
+    VMEM dispatch to chunked-K kernel variants, not to the oracle.
   * ``ref.py``         — pure-jnp oracles; the semantics of record and the
     XLA execution path on non-TPU backends.
   * ``min_dist.py``, ``lloyd.py``, ``fused_lloyd.py`` — the Pallas kernels.
-  * ``tuning.py``      — the shared (d, k)-keyed block-size autotune table.
+    All take float32 or bfloat16 inputs with float32 accumulators.
+  * ``tuning.py``      — the shared block-size autotune tables
+    ((d, k)-keyed resident sizes + d-keyed chunked-K sizes).
 
 Add a kernel here only for compute hot-spots the algorithms actually hit;
-every kernel ships with an oracle in ``ref.py`` and a parity sweep in
-``tests/``.
+every kernel ships with an oracle in ``ref.py`` and is wired into the
+conformance harness (``tests/test_kernel_conformance.py``, run under both
+backends by ``make test-kernels`` and CI's ``kernels`` job) — new
+``ops.py`` entry points fail ``test_every_entry_point_covered`` until
+they are added to its grid.
 """

@@ -18,6 +18,22 @@ whole (padded) center set resident in VMEM:
   compare against the broadcast threshold ``v``, AND into the ``alive``
   mask, and accumulate per-machine live counts — the (m, p) distance array
   never exists.
+* ``update_min_dist``: the D²-seeding hot path. One seeding step lowers
+  the running min-d2 against the newly chosen center(s) AND totals the
+  weighted sampling mass for the next categorical draw — fused here into
+  one sweep of ``x`` instead of a distance pass plus three (n,) passes.
+* ``*_chunked``: big-k variants of the two fused kernels above for
+  EIM11-sized center sets that do not fit VMEM. The center set is tiled
+  through VMEM in ``tuning.chunk_sizes`` panels with a running
+  (min, argmin) per point panel (the ``min_dist`` grid structure);
+  the assign-reduce version runs a second scatter pass over point panels
+  with the center-chunk axis outermost so each (k_chunk, d) accumulator
+  stays resident while every panel streams by.
+
+All kernels accept float32, bfloat16 or float16 points/centers (every
+``UPLINK_DTYPES`` precision) and accumulate in float32 (inputs are
+widened on load from VMEM, never in HBM), so reduced-precision uplink
+payloads are clustered without an upcast materializing 2x the bytes.
 
 Block sizes come from the shared autotune table in ``kernels.tuning``.
 """
@@ -29,8 +45,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tuning import block_sizes, clamp_bn
+from repro.kernels.tuning import block_sizes, chunk_sizes, clamp_bn
 
 _BIG = 3.0e38  # plain float so the kernels capture no traced constants
 
@@ -181,6 +198,288 @@ def remove_below_pallas(x: jax.Array, c: jax.Array, alive: jax.Array,
             jax.ShapeDtypeStruct((m, xp.shape[1]), jnp.int8),
             jax.ShapeDtypeStruct((m,), jnp.int32),
         ],
+        interpret=interpret,
+    )(xp, ap, cp, cvp, vv)
+    return alive_new[:, :p].astype(bool), live
+
+
+def _update_kernel(x_ref, w_ref, d2_ref, c_ref, cv_ref,
+                   out_ref, mass_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        mass_ref[...] = jnp.zeros(mass_ref.shape, jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)              # (bn, d)
+    w = w_ref[...].astype(jnp.float32)              # (bn,)
+    c = c_ref[...].astype(jnp.float32)              # (kp, d)
+    cv = cv_ref[...]
+    cand, _ = _panel_min(x, c, cv)
+    prev = d2_ref[...].astype(jnp.float32)
+    # with every center masked off the update is a no-op (matches the
+    # inf-masked oracle exactly even when the caller's running d2 is
+    # still +inf); the mask is checked directly — cand's _BIG sentinel
+    # cannot distinguish "no valid center" from a genuinely huge distance
+    new = jnp.where(jnp.any(cv != 0), jnp.minimum(prev, cand), prev)
+    out_ref[...] = new
+    mass_ref[0, 0] += jnp.sum(w * new)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def update_min_dist_pallas(x: jax.Array, w: jax.Array, c: jax.Array,
+                           d2: jax.Array,
+                           c_valid: Optional[jax.Array] = None,
+                           *, interpret: bool = False
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Fused D²-seeding update: ((n,) new min-d2, () weighted mass).
+
+    Semantics == ``min(d2, min_dist(x, c))`` plus ``sum(w * new_d2)``;
+    one HBM sweep of ``x`` with the (small) new-center block resident.
+    """
+    n, d = x.shape
+    kc = c.shape[0]
+    if c_valid is None:
+        c_valid = jnp.ones((kc,), jnp.int8)
+    else:
+        c_valid = c_valid.astype(jnp.int8)
+
+    bn, _ = block_sizes(d, kc)
+    kp = -(-kc // 128) * 128                         # new centers resident
+    if kp >= 512:
+        bn = min(bn, 256)
+    bn = clamp_bn(bn, n)
+    xp = jnp.pad(x, ((0, -n % bn), (0, 0)))
+    wp = jnp.pad(w, (0, -n % bn))                    # weight-0 rows: no mass
+    dp = jnp.pad(d2.astype(jnp.float32), (0, -n % bn))  # pad 0, not inf:
+    cp = jnp.pad(c, ((0, kp - kc), (0, 0)))             # 0 * w_pad stays 0
+    cvp = jnp.pad(c_valid, (0, kp - kc))
+
+    grid = (xp.shape[0] // bn,)
+    out, mass = pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((kp, d), lambda i: (0, 0)),
+            pl.BlockSpec((kp,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wp, dp, cp, cvp)
+    return out[:n], mass[0, 0]
+
+
+def _assign_chunked_kernel(x_ref, w_ref, c_ref, cv_ref,
+                           idx_ref, cost_ref, d2_scr, *, bk: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_cost():
+        cost_ref[...] = jnp.zeros(cost_ref.shape, jnp.float32)
+
+    @pl.when(j == 0)
+    def _init_panel():
+        d2_scr[...] = jnp.full(d2_scr.shape, _BIG, jnp.float32)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, jnp.int32)
+
+    x = x_ref[...].astype(jnp.float32)              # (bn, d) resident over j
+    local_min, local_arg = _panel_min(x, c_ref[...].astype(jnp.float32),
+                                      cv_ref[...])
+    local_arg = local_arg.astype(jnp.int32) + j * bk
+
+    prev = d2_scr[...]                              # running min stays in
+    better = local_min < prev                       # VMEM scratch; it is
+    idx_ref[...] = jnp.where(better, local_arg, idx_ref[...])  # never
+    d2_scr[...] = jnp.where(better, local_min, prev)           # written out
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _cost():
+        w = w_ref[...].astype(jnp.float32)
+        cost_ref[0, 0] += jnp.sum(w * d2_scr[...])
+
+
+def _reduce_chunked_kernel(x_ref, w_ref, a_ref, sums_ref, cnt_ref,
+                           *, bk: int):
+    jc = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros(sums_ref.shape, jnp.float32)
+        cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)              # (bn, d)
+    w = w_ref[...].astype(jnp.float32)              # (bn,)
+    # chunk-local assignment: rows assigned outside [jc*bk, (jc+1)*bk)
+    # fall outside the iota range and produce an all-zero one-hot row
+    local = a_ref[...] - jc * bk
+    centers = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], bk), 1)
+    onehot = (local[:, None] == centers).astype(jnp.float32) * w[:, None]
+
+    sums_ref[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (bk, d)
+    cnt_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_assign_reduce_chunked_pallas(
+        x: jax.Array, w: jax.Array, c: jax.Array,
+        c_valid: Optional[jax.Array] = None,
+        *, interpret: bool = False
+        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-K one-sweep Lloyd step for center sets beyond VMEM.
+
+    Two grid walks: (point panel x center chunk, chunk innermost) computes
+    the running (min, argmin) and weighted cost with ``x`` resident across
+    chunks — one HBM read of ``x``; then (center chunk x point panel,
+    panel innermost) scatters the weighted one-hot into each resident
+    (k_chunk, d) accumulator. Lifts the ``_MAX_PALLAS_K`` fallback so
+    EIM11-sized center sets stay on the Pallas path.
+    """
+    n, d = x.shape
+    k = c.shape[0]
+    if c_valid is None:
+        c_valid = jnp.ones((k,), jnp.int8)
+    else:
+        c_valid = c_valid.astype(jnp.int8)
+
+    bn, bk = chunk_sizes(d)
+    bn = clamp_bn(bn, n)
+    kp = -(-k // bk) * bk
+    xp = jnp.pad(x, ((0, -n % bn), (0, 0)))
+    wp = jnp.pad(w, (0, -n % bn))                    # weight-0 rows are no-ops
+    cp = jnp.pad(c, ((0, kp - k), (0, 0)))
+    cvp = jnp.pad(c_valid, (0, kp - k))              # padded centers invalid
+
+    np_ = xp.shape[0] // bn
+    nc = kp // bk
+    assign, cost = pl.pallas_call(
+        functools.partial(_assign_chunked_kernel, bk=bk),
+        grid=(np_, nc),                              # chunk axis innermost
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn,), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp, cp, cvp)
+
+    sums, counts = pl.pallas_call(
+        functools.partial(_reduce_chunked_kernel, bk=bk),
+        grid=(nc, np_),                              # panel axis innermost
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda jc, i: (i, 0)),
+            pl.BlockSpec((bn,), lambda jc, i: (i,)),
+            pl.BlockSpec((bn,), lambda jc, i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, d), lambda jc, i: (jc, 0)),
+            pl.BlockSpec((bk,), lambda jc, i: (jc,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kp, d), jnp.float32),
+            jax.ShapeDtypeStruct((kp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wp, assign)
+    return sums[:k], counts[:k], cost[0, 0]
+
+
+def _remove_chunked_kernel(x_ref, a_ref, c_ref, cv_ref, v_ref,
+                           out_ref, live_ref, d2_scr):
+    j = pl.program_id(1)                             # point panel
+    jc = pl.program_id(2)                            # center chunk
+
+    @pl.when((j == 0) & (jc == 0))
+    def _init_machine():
+        live_ref[...] = jnp.zeros(live_ref.shape, jnp.int32)
+
+    @pl.when(jc == 0)
+    def _init_panel():
+        d2_scr[...] = jnp.full(d2_scr.shape, _BIG, jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)                 # (bn, d) resident over jc
+    local_min, _ = _panel_min(x, c_ref[...].astype(jnp.float32),
+                              cv_ref[...])
+    d2_scr[...] = jnp.minimum(d2_scr[...], local_min)  # running min in VMEM
+
+    @pl.when(jc == pl.num_programs(2) - 1)
+    def _finish_panel():
+        keep = (a_ref[0] != 0) & (d2_scr[...] > v_ref[0, 0])
+        out_ref[0] = keep.astype(jnp.int8)
+        live_ref[0] += jnp.sum(keep.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def remove_below_chunked_pallas(x: jax.Array, c: jax.Array,
+                                alive: jax.Array, v: jax.Array,
+                                c_valid: Optional[jax.Array] = None,
+                                *, interpret: bool = False
+                                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked-K fused SOCCER removal for center sets beyond VMEM.
+
+    Same contract as ``remove_below_pallas``; the center set streams
+    through VMEM in ``tuning.chunk_sizes`` panels (chunk axis innermost,
+    each point panel resident across chunks) with a running min per point.
+    """
+    m, p, d = x.shape
+    k = c.shape[0]
+    if c_valid is None:
+        c_valid = jnp.ones((k,), jnp.int8)
+    else:
+        c_valid = c_valid.astype(jnp.int8)
+
+    bn, bk = chunk_sizes(d)
+    bn = clamp_bn(bn, p)
+    kp = -(-k // bk) * bk
+    xp = jnp.pad(x, ((0, 0), (0, -p % bn), (0, 0)))
+    ap = jnp.pad(alive.astype(jnp.int8), ((0, 0), (0, -p % bn)))  # pad = dead
+    cp = jnp.pad(c, ((0, kp - k), (0, 0)))
+    cvp = jnp.pad(c_valid, (0, kp - k))
+    vv = jnp.reshape(v, (1, 1)).astype(jnp.float32)
+
+    grid = (m, xp.shape[1] // bn, kp // bk)          # chunk axis innermost
+    alive_new, live = pl.pallas_call(
+        _remove_chunked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, d), lambda i, j, jc: (i, j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, jc: (i, j)),
+            pl.BlockSpec((bk, d), lambda i, j, jc: (jc, 0)),
+            pl.BlockSpec((bk,), lambda i, j, jc: (jc,)),
+            pl.BlockSpec((1, 1), lambda i, j, jc: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda i, j, jc: (i, j)),
+            pl.BlockSpec((1,), lambda i, j, jc: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, xp.shape[1]), jnp.int8),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn,), jnp.float32)],
         interpret=interpret,
     )(xp, ap, cp, cvp, vv)
     return alive_new[:, :p].astype(bool), live

@@ -11,7 +11,8 @@ The default is controlled by the ``REPRO_KERNEL_BACKEND`` environment
 variable (``ref`` | ``pallas``); unset means ``auto``. An explicit
 ``backend=`` argument always wins over the environment.
 
-Entry points:
+Entry points (``ENTRY_POINTS`` below; every one is exercised differentially
+ref-vs-pallas by tests/test_kernel_conformance.py — ``make test-kernels``):
   * ``min_dist(x, c, c_valid)``            — (n,) min-d2 + argmin sweep.
   * ``lloyd_reduce(x, w, assign, k)``      — per-center (sums, counts).
   * ``fused_assign_reduce(x, w, c, c_valid)`` — ONE sweep of ``x`` doing
@@ -22,12 +23,19 @@ Entry points:
     (m, p, d) machine-sharded points: min-d2, threshold compare, alive-mask
     update and per-machine live counts in one sweep (the (m, p) distance
     array is never materialized).
+  * ``update_min_dist(x, w, c, d2, c_valid)`` — fused D²-seeding step:
+    lower the running min-d2 against newly chosen center(s) and total the
+    weighted sampling mass, one sweep of ``x`` (adopted by k-means++,
+    minibatch seeding and the sharded-coordinator seeding paths).
 
-Shape guards: feature dims above ``_MAX_PALLAS_D`` and (for the fused
-kernels, whose center set stays resident in VMEM) center counts above
-``_MAX_PALLAS_K`` fall back to the XLA oracle path. The oracle and the
-kernels agree to float tolerance for every shape/dtype in the test sweeps;
-callers never see which backend ran.
+Shape guards: feature dims above ``_MAX_PALLAS_D`` fall back to the XLA
+oracle path. Center counts above ``_MAX_PALLAS_K`` no longer fall back:
+the fused kernels switch to chunked-K variants that tile the center set
+through VMEM (EIM11-sized center sets stay on the Pallas path). All
+kernels take float32, bfloat16 or float16 points/centers (every
+``UPLINK_DTYPES`` precision) and accumulate in float32.
+The oracle and the kernels agree to float tolerance for every shape/dtype
+in the conformance grid; callers never see which backend ran.
 """
 from __future__ import annotations
 
@@ -38,14 +46,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.fused_lloyd import (fused_assign_reduce_pallas,
-                                       remove_below_pallas)
+from repro.kernels.fused_lloyd import (fused_assign_reduce_chunked_pallas,
+                                       fused_assign_reduce_pallas,
+                                       remove_below_chunked_pallas,
+                                       remove_below_pallas,
+                                       update_min_dist_pallas)
 from repro.kernels.lloyd import lloyd_reduce_pallas
 from repro.kernels.min_dist import min_dist_pallas
 
 _MAX_PALLAS_D = 512   # larger feature dims fall back to the XLA path
-_MAX_PALLAS_K = 1024  # fused kernels keep all centers in VMEM; beyond this
-                      # (EIM11-sized center sets) the chunked oracle wins
+_MAX_PALLAS_K = 1024  # fused kernels keep all centers in VMEM up to this;
+                      # beyond it the chunked-K Pallas variants take over
+
+# The public kernel surface; the conformance harness iterates over this.
+ENTRY_POINTS = ("min_dist", "lloyd_reduce", "fused_assign_reduce",
+                "remove_below", "update_min_dist")
 
 
 def _backend(explicit: Optional[str]) -> str:
@@ -90,14 +105,20 @@ def fused_assign_reduce(x: jax.Array, w: jax.Array, c: jax.Array,
     """One-sweep Lloyd step: ((k, d) sums, (k,) counts, () weighted cost).
 
     Semantics == min_dist followed by lloyd_reduce plus the weighted cost
-    of ``c`` on (x, w); the Pallas path reads ``x`` from HBM once.
+    of ``c`` on (x, w); the Pallas path reads ``x`` from HBM once. Center
+    sets beyond ``_MAX_PALLAS_K`` run chunked: the assign phase still
+    reads ``x`` once (centers tiled through VMEM), but the scatter phase
+    re-streams ``x`` once per center chunk — 1 + ceil(k / k_chunk) reads
+    total (see ``benchmarks/bench_kernels.analytic``).
     """
     b = _backend(backend)
-    if (b == "pallas" and x.shape[-1] <= _MAX_PALLAS_D
-            and c.shape[0] <= _MAX_PALLAS_K):
+    if b == "pallas" and x.shape[-1] <= _MAX_PALLAS_D:
         interpret = jax.default_backend() != "tpu"
-        return fused_assign_reduce_pallas(x, w, c, c_valid,
-                                          interpret=interpret)
+        if c.shape[0] <= _MAX_PALLAS_K:
+            return fused_assign_reduce_pallas(x, w, c, c_valid,
+                                              interpret=interpret)
+        return fused_assign_reduce_chunked_pallas(x, w, c, c_valid,
+                                                  interpret=interpret)
     return ref.fused_assign_reduce_ref(x, w, c, c_valid)
 
 
@@ -107,9 +128,41 @@ def remove_below(x: jax.Array, c: jax.Array, alive: jax.Array, v: jax.Array,
                  ) -> Tuple[jax.Array, jax.Array]:
     """Fused SOCCER removal: ((m, p) bool alive & min-d2 > v, (m,) counts)."""
     b = _backend(backend)
-    if (b == "pallas" and x.shape[-1] <= _MAX_PALLAS_D
-            and c.shape[0] <= _MAX_PALLAS_K):
+    if b == "pallas" and x.shape[-1] <= _MAX_PALLAS_D:
         interpret = jax.default_backend() != "tpu"
-        return remove_below_pallas(x, c, alive, v, c_valid,
-                                   interpret=interpret)
+        if c.shape[0] <= _MAX_PALLAS_K:
+            return remove_below_pallas(x, c, alive, v, c_valid,
+                                       interpret=interpret)
+        return remove_below_chunked_pallas(x, c, alive, v, c_valid,
+                                           interpret=interpret)
     return ref.remove_below_ref(x, c, alive, v, c_valid)
+
+
+def update_min_dist(x: jax.Array, w: jax.Array, c: jax.Array,
+                    d2: jax.Array,
+                    c_valid: Optional[jax.Array] = None,
+                    *, backend: Optional[str] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Fused D²-seeding step: ((n,) min(d2, d2(x, c)), () sum w * new d2).
+
+    With zero valid centers the update is a no-op on ``d2`` (both
+    backends). The new-center block usually stays resident (1 row for
+    sequential seeding, a candidate block for k-means‖ rounds); blocks
+    beyond ``_MAX_PALLAS_K`` (k-means‖ seeding at large k_plus: the
+    per-round buffer is ~6·k rows) run as a static sequence of resident
+    sweeps — the elementwise min is associative, so slicing the block is
+    exact, and the path stays on Pallas.
+    """
+    b = _backend(backend)
+    if b == "pallas" and x.shape[-1] <= _MAX_PALLAS_D:
+        interpret = jax.default_backend() != "tpu"
+        kc = c.shape[0]
+        if kc <= _MAX_PALLAS_K:
+            return update_min_dist_pallas(x, w, c, d2, c_valid,
+                                          interpret=interpret)
+        for s in range(0, kc, _MAX_PALLAS_K):
+            cv = None if c_valid is None else c_valid[s:s + _MAX_PALLAS_K]
+            d2, mass = update_min_dist_pallas(x, w, c[s:s + _MAX_PALLAS_K],
+                                              d2, cv, interpret=interpret)
+        return d2, mass
+    return ref.update_min_dist_ref(x, w, c, d2, c_valid)

@@ -73,6 +73,41 @@ def min_dist_ref(x: jax.Array, c: jax.Array,
     return jnp.maximum(dmin + x2, 0.0), idx
 
 
+def update_min_dist_ref(x: jax.Array, w: jax.Array, c: jax.Array,
+                        d2: jax.Array,
+                        c_valid: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the incremental D²-seeding update.
+
+    One seeding step of (distributed) k-means++ lowers the running
+    min-distance against the newly chosen center(s) and needs the total
+    weighted sampling mass ``sum_i w_i * d2_i`` for the next categorical
+    draw. The Pallas kernel fuses both into a single sweep of ``x``; the
+    unfused path reads ``x`` plus three (n,) arrays per center.
+
+    Args:
+      x: (n, d) points.
+      w: (n,) float weights (0 for padded rows).
+      c: (kc, d) newly added centers (kc == 1 for sequential seeding;
+         a whole candidate block for k-means‖-style rounds).
+      d2: (n,) running min squared distance before this update.
+      c_valid: optional (kc,) bool mask; with zero valid centers the
+        update is a no-op (d2 passes through unchanged).
+
+    Returns:
+      d2_new: (n,) float32 — min(d2, min_j ||x_i - c_j||^2), elementwise
+              monotone non-increasing in ``d2``.
+      mass:   ()  float32 — sum_i w_i * d2_new_i.
+    """
+    # min_dist_ref returns +inf with zero valid centers, so the min below
+    # is already the required no-op (and big candidate blocks inherit its
+    # center-panel streaming)
+    cand, _ = min_dist_ref(x, c, c_valid)
+    d2_new = jnp.minimum(d2.astype(jnp.float32), cand)
+    mass = jnp.sum(w.astype(jnp.float32) * d2_new)
+    return d2_new, mass
+
+
 def lloyd_reduce_ref(x: jax.Array, w: jax.Array, assign: jax.Array,
                      k: int) -> Tuple[jax.Array, jax.Array]:
     """Weighted per-center accumulation for one Lloyd step.

@@ -46,6 +46,26 @@ def block_sizes(d: int, k: int) -> Tuple[int, int]:
     return _TABLE[(_bucket(d, _D_BUCKETS), _bucket(k, _K_BUCKETS))]
 
 
+# (d_bucket) -> (bn, k_chunk) for the chunked-K fused kernels: the center
+# set does NOT stay resident; k_chunk-row center panels are tiled through
+# VMEM with a running (min, argmin) per point panel. The live panels are
+# x (bn, d), centers (k_chunk, d), the (bn, k_chunk) distance/one-hot
+# panel and the (k_chunk, d) + (k_chunk,) chunk accumulators — sized for
+# the same ~4 MiB budget as the resident table above.
+_CHUNK_TABLE = {
+    128: (512, 1024),
+    256: (512, 512),
+    512: (256, 512),
+}
+
+
+def chunk_sizes(d: int) -> Tuple[int, int]:
+    """(bn, k_chunk) panel sizes for the chunked-K (k > resident-VMEM)
+    variants of the fused kernels; keyed by feature dim only because the
+    chunk width replaces k as the free center-axis parameter."""
+    return _CHUNK_TABLE[_bucket(d, _D_BUCKETS)]
+
+
 def clamp_bn(bn: int, n: int) -> int:
     """Shrink bn toward n (rounded up to the 128-sublane tile) so tiny
     inputs don't pad to a full panel."""

@@ -96,15 +96,21 @@ def _parse_op(line: str) -> Optional[_Op]:
         return None
     kind = mk.group(1)
     tail = mk.group(2)
-    # operands: up to the first unnested ')'
+    # operands: up to the first unnested ')'. Depending on the XLA
+    # version, operand tokens print bare ("%arg") or with their full type
+    # ("f32[64,32]{1,0} %arg") — take the %name wherever it sits in the
+    # token (shape braces never contain '%', so the search is unambiguous).
     depth, i = 1, 0
     for i, ch in enumerate(tail):
         depth += ch == "("
         depth -= ch == ")"
         if depth == 0:
             break
-    opnds = [t.strip().lstrip("%") for t in tail[:i].split(",") if
-             t.strip().startswith("%")]
+    opnds = []
+    for t in tail[:i].split(","):
+        m_op = re.search(r"%([\w\.\-]+)", t)
+        if m_op:
+            opnds.append(m_op.group(1))
     attrs = tail[i + 1:]
     return _Op(name, rtype, kind, opnds, attrs)
 

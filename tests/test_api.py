@@ -139,6 +139,49 @@ def test_soccer_params_validation():
                  sharded_threshold="topk", sharded_seeding="kmeanspar")
 
 
+@pytest.mark.parametrize("algo", sorted(TINY))
+def test_fit_seed_deterministic(data, algo):
+    """Same seed -> bit-identical ClusterResult per algorithm (virtual
+    backend; the mesh-backend leg lives in test_distributed.py's
+    subprocess, which has the 8 host devices it needs)."""
+    _, parts, _ = data
+    r1 = fit(parts, K, algo=algo, backend="virtual", seed=7,
+             **TINY.get(algo, {}))
+    r2 = fit(parts, K, algo=algo, backend="virtual", seed=7,
+             **TINY.get(algo, {}))
+    assert np.array_equal(r1.centers, r2.centers), algo
+    assert r1.rounds == r2.rounds
+    assert np.array_equal(r1.uplink_points, r2.uplink_points)
+    # and a different seed is allowed to (and here does) change something
+    r3 = fit(parts, K, algo=algo, backend="virtual", seed=8,
+             **TINY.get(algo, {}))
+    assert r3.centers.shape == r1.centers.shape
+
+
+def test_fit_ref_vs_pallas_cost_agreement(data, monkeypatch):
+    """fit() through the interpret-mode Pallas kernels must land on the
+    same clustering cost as through the jnp oracle. Caches are cleared
+    between env flips: jit traces capture the kernel backend, so a stale
+    executable would silently keep the previous backend."""
+    x, parts, _ = data
+    costs = {}
+    for kb in ("ref", "pallas"):
+        monkeypatch.setenv("REPRO_KERNEL_BACKEND", kb)
+        jax.clear_caches()
+        for algo in ("lloyd", "soccer"):
+            res = fit(parts, K, algo=algo, backend="virtual", seed=1,
+                      **TINY.get(algo, {}))
+            costs[(algo, kb)] = float(res.cost(x))
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND")
+    jax.clear_caches()                   # drop pallas-traced executables
+    # backends may legitimately break exact distance ties differently
+    # (different summation orders), shifting a few boundary points between
+    # clusters — a broken kernel moves cost by orders of magnitude, not %
+    for algo in ("lloyd", "soccer"):
+        assert costs[(algo, "pallas")] == pytest.approx(
+            costs[(algo, "ref")], rel=5e-2), (algo, costs)
+
+
 def test_cost_helper_matches_centralized(data):
     x, parts, _ = data
     res = fit(parts, K, algo="lloyd", backend="virtual", iters=5, seed=0)

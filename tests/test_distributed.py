@@ -55,20 +55,27 @@ out["facade_virtual_identical"] = bool(
 out["facade_mesh_identical"] = bool(
     np.array_equal(fm.centers, rm.centers) and fm.rounds == rm.rounds)
 
-# every registered algorithm runs on the mesh backend
+# every registered algorithm runs on the mesh backend, and same-seed
+# reruns are bit-identical (seed determinism on the mesh leg; the
+# virtual leg lives in test_api.py)
 tiny = {"soccer": dict(epsilon=0.2),
         "kmeans_parallel": dict(rounds=2, lloyd_iters=5),
         "eim11": dict(epsilon=0.2, max_rounds=3),
         "lloyd": dict(iters=5),
         "minibatch": dict(batch=128, steps=10)}
-mesh_ok = {}
+mesh_ok, mesh_det = {}, {}
 for algo in list_algorithms():
-    r = fit(parts, 5, algo=algo, backend=MeshBackend(mesh), seed=0,
+    r = fit(parts, 5, algo=algo, backend=MeshBackend(mesh), seed=4,
             **tiny.get(algo, {}))
+    r2 = fit(parts, 5, algo=algo, backend=MeshBackend(mesh), seed=4,
+             **tiny.get(algo, {}))
     mesh_ok[algo] = bool(np.all(np.isfinite(r.centers))
                          and r.backend == "mesh"
                          and np.isfinite(r.cost(xg)))
+    mesh_det[algo] = bool(np.array_equal(r.centers, r2.centers)
+                          and r.rounds == r2.rounds)
 out["mesh_algos"] = mesh_ok
+out["mesh_determinism"] = mesh_det
 print("RESULT " + json.dumps(out))
 """
 
@@ -96,3 +103,5 @@ def test_virtual_equals_mesh_subprocess():
     assert out["facade_mesh_identical"]
     # all five algorithms produce finite results on the mesh backend
     assert all(out["mesh_algos"].values()), out["mesh_algos"]
+    # same seed -> bit-identical centers on the mesh backend
+    assert all(out["mesh_determinism"].values()), out["mesh_determinism"]

@@ -136,8 +136,10 @@ def test_ops_fallback_large_d():
     np.testing.assert_array_equal(np.asarray(l), np.asarray(l_r))
 
 
-def test_ops_fallback_large_k():
-    """k > _MAX_PALLAS_K (EIM11-sized center sets) routes to the oracle."""
+def test_ops_large_k_stays_on_pallas():
+    """k > _MAX_PALLAS_K (EIM11-sized center sets) no longer falls back:
+    the chunked-K Pallas variants tile the centers through VMEM and must
+    match the oracle (the old test asserted an oracle fallback here)."""
     rng = np.random.default_rng(12)
     n, k, d = 64, ops._MAX_PALLAS_K + 32, 7
     x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
@@ -145,8 +147,22 @@ def test_ops_fallback_large_k():
     c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
     s, cnt, cost = ops.fused_assign_reduce(x, w, c, backend="pallas")
     s_r, cnt_r, cost_r = ref.fused_assign_reduce_ref(x, w, c)
+    np.testing.assert_allclose(s, s_r, rtol=1e-3, atol=1e-3)
     np.testing.assert_allclose(cnt, cnt_r, rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(cost, cost_r, rtol=1e-5)
+    from repro.kernels.fused_lloyd import fused_assign_reduce_chunked_pallas
+    s_c, cnt_c, cost_c = fused_assign_reduce_chunked_pallas(
+        x, w, c, interpret=True)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_c))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_c))
+
+    xm = x.reshape(4, -1, d)
+    alive = jnp.ones(xm.shape[:2], bool)
+    v = jnp.float32(float(d))
+    a, l = ops.remove_below(xm, c, alive, v, backend="pallas")
+    a_r, l_r = ref.remove_below_ref(xm, c, alive, v)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(l), np.asarray(l_r))
 
 
 def test_ops_env_backend(monkeypatch):
@@ -156,3 +172,96 @@ def test_ops_env_backend(monkeypatch):
     assert ops._backend("pallas") == "pallas"
     monkeypatch.delenv("REPRO_KERNEL_BACKEND")
     assert ops._backend(None) in ("ref", "pallas")
+
+
+# ---- property tests on the kernel layer --------------------------------
+# Driven by hypothesis when available (requirements-dev.txt); without it
+# the same properties run over a fixed-seed parameter sweep instead of
+# skipping — the invariants are load-bearing for SOCCER's correctness.
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+BACKENDS = ["ref", "pallas"]
+
+
+def _property(fixed_cases, **strategies):
+    """@given(**strategies) under hypothesis, else a fixed-case sweep."""
+    def wrap(f):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=12, deadline=None)(
+                given(**strategies)(f))
+        names = ",".join(strategies.keys())
+        return pytest.mark.parametrize(names, fixed_cases)(f)
+    return wrap
+
+
+if HAVE_HYPOTHESIS:
+    _INT = st.integers
+    _BACKEND = st.sampled_from(BACKENDS)
+else:                                    # placeholders, never drawn from
+    _INT = lambda lo, hi: None           # noqa: E731
+    _BACKEND = None
+
+
+@_property([(17, 3, 4, 2, 0, "ref"), (40, 7, 1, 3, 1, "pallas"),
+            (60, 9, 7, 4, 2, "pallas"), (5, 1, 2, 2, 3, "ref")],
+           n=_INT(5, 60), d=_INT(1, 9), k=_INT(1, 7), dup=_INT(2, 4),
+           seed=_INT(0, 1000), backend=_BACKEND)
+def test_weighted_equals_duplicated_points(n, d, k, dup, seed, backend):
+    """(x, w * dup) must reduce identically to x repeated dup times with
+    weight w — the invariant that lets weighted samples stand in for
+    duplicated points everywhere in SOCCER."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.random(n) + 0.1, jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    s1, c1, cost1 = ops.fused_assign_reduce(x, w * dup, c, backend=backend)
+    x_d = jnp.tile(x, (dup, 1))
+    w_d = jnp.tile(w, (dup,))
+    s2, c2, cost2 = ops.fused_assign_reduce(x_d, w_d, c, backend=backend)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(cost1, cost2, rtol=1e-4, atol=1e-5)
+
+
+@_property([(17, 3, 4, 0, "ref"), (40, 7, 1, 1, "pallas"),
+            (60, 9, 7, 2, "pallas"), (5, 1, 2, 3, "ref")],
+           n=_INT(5, 60), d=_INT(1, 9), k=_INT(1, 7),
+           seed=_INT(0, 1000), backend=_BACKEND)
+def test_reduction_permutation_invariant(n, d, k, seed, backend):
+    """Reductions must not depend on point order (up to float summation
+    tolerance): permuting (x, w) leaves sums/counts/cost unchanged."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    perm = jnp.asarray(rng.permutation(n))
+    s1, c1, cost1 = ops.fused_assign_reduce(x, w, c, backend=backend)
+    s2, c2, cost2 = ops.fused_assign_reduce(x[perm], w[perm], c,
+                                            backend=backend)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(cost1, cost2, rtol=1e-4, atol=1e-5)
+
+
+@_property([(17, 3, 1, 3, 0, "ref"), (40, 7, 5, 1, 1, "pallas"),
+            (60, 9, 2, 4, 2, "pallas"), (5, 1, 1, 2, 3, "ref")],
+           n=_INT(5, 60), d=_INT(1, 9), kc=_INT(1, 5), steps=_INT(1, 4),
+           seed=_INT(0, 1000), backend=_BACKEND)
+def test_update_min_dist_monotone(n, d, kc, steps, seed, backend):
+    """The running min-d2 never increases across seeding updates, and the
+    reported mass is exactly sum(w * d2) of the returned state."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    d2 = jnp.asarray(rng.random(n) * 20.0, jnp.float32)
+    for _ in range(steps):
+        c = jnp.asarray(rng.normal(size=(kc, d)), jnp.float32)
+        d2_new, mass = ops.update_min_dist(x, w, c, d2, backend=backend)
+        assert bool(jnp.all(d2_new <= d2 + 1e-6))
+        np.testing.assert_allclose(mass, jnp.sum(w * d2_new), rtol=1e-5)
+        d2 = d2_new

@@ -65,6 +65,12 @@ def analytic(kernel: str, n: int, k: int, d: int):
         # a distance pass plus three (n,) re-reads (see seeding_* below)
         flops = 2.0 * n * k * d + 2.0 * n
         bytes_hbm = 4.0 * (n * d + 4 * n + k * d + 1)
+    elif kernel == "sensitivity_scores":
+        # coreset sensitivity pass: reads x, w, c; writes scores (n),
+        # assign (n int32), mass (k), cost — one sweep of x vs the three
+        # of the unfused min_dist + count-reduce + cost-reduce chain
+        flops = 2.0 * n * k * d + 2.0 * n * k
+        bytes_hbm = 4.0 * (n * d + 3 * n + k * d + k + 1)
     elif kernel == "fused_assign_reduce_chunked":
         # phase A streams x once (resident across center chunks, running
         # min in VMEM scratch) but re-fetches each center chunk per point
@@ -155,6 +161,10 @@ def run(quick: bool = False):
         t, _ = timed(lambda: ops.update_min_dist(x, w, c1, d2))
         rows.append(_row("update_min_dist", n, 1, d, t * n / n_meas, n_meas))
 
+        t, _ = timed(lambda: ops.sensitivity_scores(x, w, c))
+        rows.append(_row("sensitivity_scores", n, k, d,
+                         t * n / n_meas, n_meas))
+
         m = 8
         xm = x[: (n_meas // m) * m].reshape(m, -1, d)
         alive = jnp.ones(xm.shape[:2], bool)
@@ -199,8 +209,35 @@ def run(quick: bool = False):
         rows.append(_row("remove_below_chunked", n, k, d,
                          t * n / n_meas, n_meas))
 
+    # Coreset construction sweep: end-to-end per-machine build_coreset
+    # (k-means++ bicriteria + sensitivity sweep + importance draw) as a
+    # function of the coreset size t — the uplink knob. Wall time is
+    # near-flat in t (construction is dominated by the x sweeps, not the
+    # (t,)-sized draw), which is exactly why uplink size is cheap to tune.
+    import jax as _jax
+
+    from repro.coresets import build_coreset
+    coreset_rows = []
+    n_cs, d_cs, kb_cs = (50_000, 64, 16)
+    n_meas = min(n_cs, QUICK_N) if quick else n_cs
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(n_meas, d_cs)), jnp.float32)
+    w = jnp.ones((n_meas,), jnp.float32)
+    build = _jax.jit(build_coreset, static_argnums=(3, 4))
+    key = _jax.random.PRNGKey(0)
+    for t_cs in (256, 1024, 4096):
+        tsec, _ = timed(lambda: build(key, x, w, t_cs, kb_cs))
+        emit(f"coreset/build/{n_cs}x{d_cs}/t{t_cs}",
+             tsec * n_cs / n_meas * 1e6, kb=kb_cs)
+        coreset_rows.append({"kernel": "coreset_build", "n": n_cs,
+                             "d": d_cs, "t": t_cs, "kb": kb_cs,
+                             "cpu_wall_s": tsec * n_cs / n_meas,
+                             "n_meas": n_meas,
+                             "extrapolated": n_meas < n_cs})
+
     save_json("kernels", {"rows": rows, "fused_vs_unfused": comparisons,
-                          "seeding_fused_vs_unfused": seeding_cmps})
+                          "seeding_fused_vs_unfused": seeding_cmps,
+                          "coreset_build": coreset_rows})
     return rows
 
 

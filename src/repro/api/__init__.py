@@ -18,6 +18,8 @@ from repro.api.result import ClusterResult, uplink_bytes
 from repro.api.facade import fit
 from repro.api import algorithms as _algorithms  # noqa: F401  (registers
                                                  # the built-in drivers)
+from repro.coresets import algorithms as _coreset_algorithms  # noqa: F401
+                                                 # (registers coreset_kmeans)
 
 __all__ = [
     "Backend", "ClusterResult", "CommBackend", "MeshBackend",

@@ -65,6 +65,9 @@ def fit_soccer(x_parts, k: int, *, backend, key=None, w=None, alive=None,
 
 # SOCCER's host loop exposes on_round, so fit(failure_plan=...) works.
 fit_soccer.supports_failure_plan = True
+# SOCCER's gather uplink can be coreset-compressed (repro.coresets), so
+# fit(uplink_mode="coreset") routes through SoccerParams.uplink_mode.
+fit_soccer.supports_uplink_mode = True
 
 
 @register_algorithm("kmeans_parallel")

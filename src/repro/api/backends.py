@@ -39,7 +39,10 @@ REPLICATED = "rep"         # identical value on every machine
 # Supported machine->coordinator upload precisions (see uplink_dtype on
 # the backends): points are rounded to this dtype before the scatter-psum
 # "upload" and accounted at its width in ClusterResult.uplink_bytes.
-UPLINK_DTYPES = ("float32", "bfloat16", "float16")
+# "int8" routes through the affine quantizer in ft/compression (device-
+# side storage stays f32 — the dequantized 256-level grid — so the
+# kernels need no int8 path; see core.sampling.uplink_storage_dtype).
+UPLINK_DTYPES = ("float32", "bfloat16", "float16", "int8")
 
 
 def check_uplink_dtype(dtype) -> str:

@@ -62,7 +62,7 @@ def _mask_failed_machines(parts, w, alive, ids):
 def fit(x, k: int, algo: str = "soccer", backend="auto", *,
         m: Optional[int] = None, w=None, key: Optional[jax.Array] = None,
         seed: int = 0, shuffle: bool = True, shard_policy=None,
-        uplink_dtype=None, failure_plan=None,
+        uplink_dtype=None, uplink_mode=None, failure_plan=None,
         **algo_params) -> ClusterResult:
     """Cluster ``x`` into ``k`` groups with any registered algorithm.
 
@@ -84,8 +84,17 @@ def fit(x, k: int, algo: str = "soccer", backend="auto", *,
         "contiguous" | "sorted" | "imbalanced" or a callable (see
         ``repro.data.sharding``); rejected for pre-sharded input.
       uplink_dtype: machine->coordinator payload precision ("float32"
-        default, "bfloat16", "float16"); uploads are quantized and
-        ``uplink_bytes`` accounted at this width.
+        default, "bfloat16", "float16", "int8" — the last via the affine
+        quantizer in ``repro.ft.compression``); uploads are quantized
+        and ``uplink_bytes`` accounted at this width.
+      uplink_mode: "points" (default) or "coreset" — "coreset" routes
+        the per-round upload through a machine-side sensitivity coreset
+        (``repro.coresets``), shrinking uplink rows independently of the
+        sample size; algorithms advertising ``supports_uplink_mode``
+        only. Composes with ``uplink_dtype``. Note: ``coreset_kmeans``
+        accepts only "coreset" (or omitting the knob) — its uplink is a
+        coreset by construction, so an explicit request for raw "points"
+        upload raises rather than silently going unhonored.
       failure_plan: a ``repro.ft.failures.FailurePlan`` injecting machine
         deaths / straggler deadlines (algorithms with an ``on_round``
         hook only, i.e. SOCCER).
@@ -117,6 +126,18 @@ def fit(x, k: int, algo: str = "soccer", backend="auto", *,
 
     bk = resolve_backend(backend, m, uplink_dtype=uplink_dtype)
     driver = get_algorithm(algo)
+
+    if uplink_mode is not None:
+        if uplink_mode not in ("points", "coreset"):
+            raise ValueError(
+                f"unknown uplink_mode {uplink_mode!r}: expected 'points' "
+                f"or 'coreset'")
+        if not getattr(driver, "supports_uplink_mode", False):
+            raise TypeError(
+                f"fit(algo={algo!r}) does not support uplink_mode — the "
+                f"algorithm has no compressible gather uplink; supported: "
+                f"algorithms registered with supports_uplink_mode")
+        algo_params["uplink_mode"] = uplink_mode
 
     if failure_plan is not None:
         if not getattr(driver, "supports_failure_plan", False):

@@ -21,6 +21,7 @@ _SMOKE_PARAMS = {
     "eim11": dict(epsilon=0.2, max_rounds=3),
     "lloyd": dict(iters=5),
     "minibatch": dict(batch=128, steps=10),
+    "coreset_kmeans": dict(coreset_size=256, lloyd_iters=5),
 }
 
 

@@ -17,6 +17,7 @@ _CHOICES = {
     "blackbox": ("kmeans", "minibatch"),
     "sharded_threshold": ("bisect", "topk"),
     "sharded_seeding": ("d2", "kmeanspar"),
+    "uplink_mode": ("points", "coreset"),
 }
 
 
@@ -39,6 +40,15 @@ class SoccerParams:
     outlier_frac: float = 0.0          # robust finalize (paper §9)
     straggler_rate: float = 0.0        # fraction of machines missing the
                                        # per-round sampling deadline (ft)
+    uplink_mode: str = "points"        # points | coreset: "coreset"
+                                       # compresses each machine's sample
+                                       # to a sensitivity coreset before
+                                       # the upload (repro.coresets) —
+                                       # uplink size decouples from eta
+    coreset_size: int = 0              # total coreset rows per upload
+                                       # (0 -> max(4*k_plus, eta//4))
+    coreset_bicriteria: int = 0        # machine-side bicriteria centers
+                                       # (0 -> min(k, per-machine rows))
     seed: int = 0
 
     def __post_init__(self):
@@ -60,8 +70,14 @@ class SoccerParams:
             if not 0.0 <= v < 1.0:
                 raise ValueError(
                     f"SoccerParams.{name} must be in [0, 1), got {v}")
+        if self.uplink_mode == "coreset" and self.sharded_coordinator:
+            raise ValueError(
+                "SoccerParams: uplink_mode='coreset' compresses the gather "
+                "uplink, but the sharded coordinator never gathers — use "
+                "one or the other")
         for name, lo in (("n_machines", 1), ("max_rounds", 0),
-                         ("lloyd_iters", 1), ("minibatch_size", 1)):
+                         ("lloyd_iters", 1), ("minibatch_size", 1),
+                         ("coreset_size", 0), ("coreset_bicriteria", 0)):
             v = getattr(self, name)
             if v < lo:
                 raise ValueError(

@@ -21,6 +21,12 @@ Only three primitives are needed by SOCCER/k-means‖/EIM11:
                        -> ``(m, ...)`` replicated (used for the count
                        vector that drives sample apportionment).
 * ``machine_ids()``  — global ids of the locally held machines.
+
+One derived convenience, ``concat_machines``, serves the fixed-width
+uplinks (per-machine coreset blocks, repro.coresets): every machine
+contributes exactly ``t`` rows, so the gather is a plain concatenation
+along the machine axis with no offset bookkeeping — dead machines'
+rows ride along with weight 0.
 """
 from __future__ import annotations
 
@@ -46,6 +52,11 @@ class VirtualCluster:
 
     def all_machines(self, x: jax.Array) -> jax.Array:
         return x
+
+    def concat_machines(self, x: jax.Array) -> jax.Array:
+        """(local_m, t, ...) fixed-width blocks -> (m*t, ...) replicated."""
+        g = self.all_machines(x)
+        return g.reshape((-1,) + g.shape[2:])
 
     def machine_ids(self) -> jax.Array:
         return jnp.arange(self.m, dtype=jnp.int32)
@@ -74,6 +85,11 @@ class MeshCluster:
     def all_machines(self, x: jax.Array) -> jax.Array:
         g = lax.all_gather(x, self.axis_names, tiled=True)
         return g
+
+    def concat_machines(self, x: jax.Array) -> jax.Array:
+        """(1, t, ...) local block -> (m*t, ...) replicated (all-gather)."""
+        g = self.all_machines(x)
+        return g.reshape((-1,) + g.shape[2:])
 
     def machine_ids(self) -> jax.Array:
         idx = jnp.int32(0)

@@ -32,19 +32,37 @@ from jax import lax
 def quantize_uplink(x: jax.Array, upload_dtype: str) -> jax.Array:
     """Round an upload payload to the backend's uplink precision.
 
-    Applied machine-side just before the scatter-psum "upload". The
-    result is returned IN the uplink dtype: the clustering kernels
-    (kernels/fused_lloyd) take bfloat16 points directly and widen on load
-    with float32 accumulators, so reduced-precision payloads are
-    clustered without an upcast materializing 2x the bytes. Call sites
-    that mix the payload into an f32 scatter channel promote it back —
-    the values are identical either way, only storage width differs. The
-    single definition every upload path shares — new precisions (e.g. an
-    int8 path via ft/compression) plug in here.
+    Applied machine-side just before the scatter-psum "upload". For the
+    float precisions the result is returned IN the uplink dtype: the
+    clustering kernels (kernels/fused_lloyd) take bfloat16 points
+    directly and widen on load with float32 accumulators, so
+    reduced-precision payloads are clustered without an upcast
+    materializing 2x the bytes. Call sites that mix the payload into an
+    f32 scatter channel promote it back — the values are identical
+    either way, only storage width differs.
+
+    ``"int8"`` routes through the affine quantizer in ``ft/compression``:
+    the wire format is one int8 code per coordinate plus an 8-byte
+    (scale, zero-point) pair per payload per round, riding the metadata
+    channel like the HT weights and the count vector. The returned array
+    is the *dequantized* float32 reconstruction (exactly the values the
+    coordinator would decode), so downstream clustering needs no int8
+    kernel path — see ``uplink_storage_dtype``. Accounting still charges
+    1 byte/coordinate (``ClusterResult.uplink_bytes``).
     """
     if upload_dtype == "float32":
         return x
+    if upload_dtype == "int8":
+        from repro.ft.compression import fake_quantize_int8
+        return fake_quantize_int8(x)
     return x.astype(jnp.dtype(upload_dtype))
+
+
+def uplink_storage_dtype(upload_dtype: str) -> str:
+    """Device-side storage dtype of a quantized payload: the uplink dtype
+    itself for the float precisions, float32 for ``"int8"`` (the stored
+    values are the dequantized reconstruction on the int8 grid)."""
+    return "float32" if upload_dtype == "int8" else upload_dtype
 
 
 def apportion(counts: jax.Array, total: int) -> jax.Array:
@@ -171,7 +189,12 @@ def draw_global_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
     my_c, my_off = c_vec[ids], offs[ids]
     keys = jax.vmap(jax.random.fold_in, (None, 0))(key, ids)
     idx, take = jax.vmap(sample_local, (0, 0, 0, None))(keys, alive, my_c, cap)
-    pts = quantize_uplink(jnp.take_along_axis(x, idx[..., None], axis=1),
+    pts = jnp.take_along_axis(x, idx[..., None], axis=1)
+    # buffer rows beyond the draw (take=False) are never uploaded — the
+    # scatter masks them — so overwrite them with row 0 before
+    # quantization: an extreme never-uploaded point must not widen the
+    # int8 code book the real payload is encoded with
+    pts = quantize_uplink(jnp.where(take[..., None], pts, pts[:, :1]),
                           upload_dtype)
     w_pt = jnp.take_along_axis(w, idx, axis=1)
     n_local = jnp.sum(alive, axis=1).astype(jnp.float32)
@@ -179,11 +202,40 @@ def draw_global_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
     vals = jnp.concatenate([pts, (w_pt * ht[:, None])[..., None]], axis=-1)
     buf = scatter_gather(comm, vals, take, my_off, total)
     out = buf[:, :-1]
-    if upload_dtype != "float32":
+    store = uplink_storage_dtype(upload_dtype)
+    if store != "float32":
         # the scatter channel is jointly f32 (points + weight column);
         # re-narrowing is exact — the values were already rounded above
-        out = out.astype(jnp.dtype(upload_dtype))
+        # (int8 payloads stay f32: they are already the dequantized grid)
+        out = out.astype(jnp.dtype(store))
     return out, buf[:, -1], jnp.sum(c_vec)
+
+
+def gather_weighted(comm, pts: jax.Array, wts: jax.Array,
+                    upload_dtype: str = "float32"
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Fixed-width weighted gather: per-machine summary blocks -> one
+    replicated weighted point set.
+
+    The coreset uplinks (repro.coresets) upload exactly ``t`` rows per
+    machine — dead or empty machines contribute weight-0 rows — so unlike
+    ``draw_global_sample`` no apportionment/offset bookkeeping is needed:
+    the gather is a plain machine-axis concatenation.
+
+    Args:
+      pts: (local_m, t, d) summary points.
+      wts: (local_m, t) summary weights (0 = padding row).
+      upload_dtype: machine->coordinator payload precision; the points
+        are quantized machine-side (the weights ride the metadata channel
+        at full precision, like the HT weights).
+
+    Returns:
+      ((m*t, d) points in the uplink storage dtype, (m*t,) f32 weights),
+      both replicated.
+    """
+    pts = quantize_uplink(pts, upload_dtype)
+    return (comm.concat_machines(pts),
+            comm.concat_machines(wts.astype(jnp.float32)))
 
 
 def global_weighted_choice(key: jax.Array, comm, weights: jax.Array,

@@ -61,6 +61,13 @@ class SoccerConstants:
     straggler_rate: float = 0.0
     uplink_dtype: str = "float32"       # machine->coordinator payload
                                         # precision (see api.backends)
+    uplink_mode: str = "points"         # points | coreset (repro.coresets):
+                                        # "coreset" compresses each
+                                        # machine's sample share to a
+                                        # sensitivity coreset before the
+                                        # upload — uplink decouples from eta
+    coreset_rows: int = 0               # per-machine coreset rows t
+    coreset_kb: int = 0                 # machine-side bicriteria centers
 
 
 def derive_constants(n: int, p_local: int, params: SoccerParams,
@@ -76,6 +83,16 @@ def derive_constants(n: int, p_local: int, params: SoccerParams,
     m = m or params.n_machines
     cap_sharded = min(p_local, eta,
                       max(64, int(math.ceil(8.0 * eta / max(m, 1)))))
+    coreset_rows = coreset_kb = 0
+    if params.uplink_mode == "coreset":
+        # uplink budget in rows, decoupled from eta: auto keeps enough
+        # rows for the k_plus-center black box and a 4x wire reduction
+        total_cs = params.coreset_size or max(4 * k_plus, eta // 4)
+        total_cs = min(total_cs, eta)
+        coreset_rows = max(1, min(-(-total_cs // max(m, 1)),
+                                  min(p_local, eta)))
+        coreset_kb = params.coreset_bicriteria or max(
+            1, min(params.k, coreset_rows))
     return SoccerConstants(
         k=params.k, k_plus=k_plus, d_k=d_k, eta=eta, max_rounds=max_rounds,
         cap=min(p_local, eta), cap_sharded=cap_sharded,
@@ -86,7 +103,9 @@ def derive_constants(n: int, p_local: int, params: SoccerParams,
         sharded_seeding=params.sharded_seeding,
         outlier_frac=params.outlier_frac,
         straggler_rate=params.straggler_rate,
-        uplink_dtype=uplink_dtype)
+        uplink_dtype=uplink_dtype,
+        uplink_mode=params.uplink_mode,
+        coreset_rows=coreset_rows, coreset_kb=coreset_kb)
 
 
 class SoccerState(NamedTuple):
@@ -136,10 +155,28 @@ def _blackbox(const: SoccerConstants, key: jax.Array, x: jax.Array,
 def _draw_sample(comm, const: SoccerConstants, key: jax.Array,
                  state: SoccerState, alive_eff: jax.Array,
                  n_vec_resp: jax.Array):
-    """One exact-size global sample: ((eta, d) points, (eta,) HT weights)."""
-    return draw_global_sample(comm, key, state.x, state.w, alive_eff,
-                              n_vec_resp, const.eta, const.cap,
-                              upload_dtype=const.uplink_dtype)
+    """One exact-size global sample -> (points, weights, uplink_rows,
+    sample_real).
+
+    ``uplink_mode="points"``: the paper's raw upload — (eta, d) points,
+    uplink_rows == sample_real == the realized draw.
+    ``uplink_mode="coreset"``: each machine compresses its share of the
+    SAME eta-point draw to a sensitivity coreset before the upload
+    (repro.coresets.uplink) — the coordinator sees m·t weighted rows,
+    uplink_rows shrinks to them while sample_real keeps the underlying
+    draw size (it drives the alpha = |P1|/N threshold scaling).
+    """
+    if const.uplink_mode == "coreset":
+        from repro.coresets.uplink import draw_coreset_sample
+        return draw_coreset_sample(comm, key, state.x, state.w, alive_eff,
+                                   n_vec_resp, const.eta, const.cap,
+                                   const.coreset_rows, const.coreset_kb,
+                                   upload_dtype=const.uplink_dtype)
+    pts, wts, real = draw_global_sample(comm, key, state.x, state.w,
+                                        alive_eff, n_vec_resp, const.eta,
+                                        const.cap,
+                                        upload_dtype=const.uplink_dtype)
+    return pts, wts, real, real
 
 
 def soccer_round(state: SoccerState, comm, const: SoccerConstants
@@ -168,18 +205,19 @@ def soccer_round(state: SoccerState, comm, const: SoccerConstants
             comm, const, k_s1, k_s2, k_bb, state, alive_eff, n_vec_resp,
             n_total)
     else:
-        # --- paper-faithful: upload P1, P2 (independent draws)
-        p1, w1, real1 = _draw_sample(comm, const, k_s1, state, alive_eff,
-                                     n_vec_resp)
-        p2, w2, real2 = _draw_sample(comm, const, k_s2, state, alive_eff,
-                                     n_vec_resp)
+        # --- paper-faithful: upload P1, P2 (independent draws; in
+        # coreset mode each is compressed machine-side before upload)
+        p1, w1, up1, real1 = _draw_sample(comm, const, k_s1, state,
+                                          alive_eff, n_vec_resp)
+        p2, w2, up2, _ = _draw_sample(comm, const, k_s2, state,
+                                      alive_eff, n_vec_resp)
         # --- coordinator: C_iter = A(P1, k_plus); threshold from P2
         c_iter = _blackbox(const, k_bb, p1, w1, const.k_plus)
         d2_p2, _ = ops.min_dist(p2, c_iter)
         alpha = real1.astype(jnp.float32) / jnp.maximum(
             n_total.astype(jnp.float32), 1.0)
         v = removal_threshold(d2_p2, w2, const.k, const.d_k, alpha)
-        uplink_pts = real1 + real2
+        uplink_pts = up1 + up2
 
     # --- broadcast (v, C_iter) is free (replicated); machines remove points
     # in ONE fused sweep: min-d2, threshold compare, mask update and live
@@ -210,7 +248,8 @@ def soccer_finalize(state: SoccerState, comm, const: SoccerConstants
     n_vec = comm.all_machines(n_local)
     n_total = jnp.sum(n_vec)
 
-    v_pts, v_w, real = _draw_sample(comm, const, key, state, alive_eff, n_vec)
+    v_pts, v_w, up, _ = _draw_sample(comm, const, key, state, alive_eff,
+                                     n_vec)
     c_fin = _blackbox(const, k_bb, v_pts, v_w, const.k)
 
     i = state.round_idx
@@ -223,7 +262,7 @@ def soccer_finalize(state: SoccerState, comm, const: SoccerConstants
     return state._replace(
         key=key, centers=centers, centers_valid=centers_valid,
         n_hist=state.n_hist.at[i].set(n_total),
-        uplink=state.uplink.at[i].set(real))
+        uplink=state.uplink.at[i].set(up))
 
 
 @dataclasses.dataclass

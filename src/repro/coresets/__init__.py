@@ -1,0 +1,25 @@
+"""Distributed coresets: sensitivity-sampling shard summaries.
+
+A *coreset* is a small weighted point set whose weighted k-means cost
+approximates the full data's cost for every candidate center set — the
+strongest one-round competitor to SOCCER in the literature (Balcan et
+al. 2013; Cohen-Addad et al.). This subsystem provides:
+
+* ``build_coreset`` (``sensitivity.py``) — per-machine construction:
+  k-means++ bicriteria solve, one fused sensitivity sweep
+  (``kernels.ops.sensitivity_scores``), importance-sample a weighted
+  (t, d) summary with Horvitz-Thompson weights.
+* ``coreset_kmeans`` (``algorithms.py``) — a registered one-round
+  baseline: gather every machine's coreset once, run weighted
+  k-means++/Lloyd on the coordinator.
+* ``draw_coreset_sample`` (``uplink.py``) — SOCCER's
+  ``uplink_mode="coreset"``: each round's machine-side sample is
+  compressed to a coreset before the upload, making uplink size a knob
+  independent of the sample size eta.
+"""
+from repro.coresets.sensitivity import (build_coreset, default_coreset_size,
+                                        sensitivity_sigma)
+from repro.coresets.uplink import draw_coreset_sample
+
+__all__ = ["build_coreset", "default_coreset_size", "draw_coreset_sample",
+           "sensitivity_sigma"]

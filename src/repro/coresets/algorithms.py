@@ -1,0 +1,105 @@
+"""``coreset_kmeans`` — the one-round distributed coreset baseline.
+
+The strongest single-round competitor from the literature (Balcan et al.
+2013, "Distributed k-Means and k-Median Clustering on General
+Topologies"): every machine compresses its shard to a small weighted
+sensitivity coreset, the coordinator gathers the m coresets in ONE
+communication round and runs the weighted black box on their union.
+Registered with ``repro.api`` like any other algorithm::
+
+    fit(x, k, algo="coreset_kmeans", coreset_size=2048)
+
+Uplink is exactly the coreset rows (points and dtype-aware bytes in the
+``ClusterResult``; the per-row weight rides the metadata channel at full
+precision, like the HT weights of the sampling paths). Composes with
+``uplink_dtype`` — the coreset points are quantized machine-side after
+construction — and with both backends through the comm abstraction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import register_algorithm
+from repro.api.result import ClusterResult, uplink_bytes
+from repro.core.kmeans import kmeans
+from repro.core.minibatch import minibatch_kmeans
+from repro.core.sampling import gather_weighted
+from repro.coresets.sensitivity import build_coreset, default_coreset_size
+
+
+@register_algorithm("coreset_kmeans")
+def fit_coreset_kmeans(x_parts, k: int, *, backend, key=None, w=None,
+                       alive=None, seed: int = 0, coreset_size: int = 0,
+                       bicriteria: int = 0, lloyd_iters: int = 25,
+                       blackbox: str = "kmeans", minibatch_size: int = 1024,
+                       uplink_mode: str = None) -> ClusterResult:
+    """One-round coreset clustering: compress, gather once, solve.
+
+    Args:
+      coreset_size: total coordinator-side coreset budget in rows
+        (split evenly across machines; 0 = ``default_coreset_size``).
+      bicriteria: machine-side bicriteria center count (0 = min(k, t)).
+      blackbox: coordinator solver, "kmeans" | "minibatch".
+      uplink_mode: accepted for facade symmetry; this algorithm's uplink
+        IS a coreset, so only "coreset" (or None) is valid.
+    """
+    if blackbox not in ("kmeans", "minibatch"):
+        raise ValueError(
+            f"coreset_kmeans blackbox must be 'kmeans' or 'minibatch', "
+            f"got {blackbox!r}")
+    if uplink_mode not in (None, "coreset"):
+        raise ValueError(
+            f"coreset_kmeans always uploads coresets; uplink_mode="
+            f"{uplink_mode!r} is contradictory")
+    m, p, d = x_parts.shape
+    total = coreset_size or default_coreset_size(k, m * p)
+    t = max(1, -(-total // m))                    # per-machine rows
+    kb = bicriteria or max(1, min(k, t))
+
+    comm = backend.make_comm(m)
+    ud = getattr(backend, "uplink_dtype", "float32")
+    x = backend.put(jnp.asarray(x_parts, jnp.float32), "machine")
+    w_np = np.ones((m, p), np.float32) if w is None else np.asarray(
+        w, np.float32)
+    if alive is not None:
+        w_np = np.where(np.asarray(alive), w_np, 0.0).astype(np.float32)
+    w_dev = backend.put(jnp.asarray(w_np), "machine")
+    key = jax.random.PRNGKey(seed) if key is None else key
+
+    def one_round(kk, xp, wp):
+        ids = comm.machine_ids()
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(kk, ids)
+        cpts, cw = jax.vmap(build_coreset, (0, 0, 0, None, None))(
+            keys, xp, wp, t, kb)
+        g_pts, g_w = gather_weighted(comm, cpts, cw, ud)
+        k_bb = jax.random.fold_in(kk, m + 1)      # coordinator's key
+        if blackbox == "minibatch":
+            centers, cost = minibatch_kmeans(k_bb, g_pts, g_w, k,
+                                             batch=minibatch_size)
+        else:
+            centers, cost = kmeans(k_bb, g_pts, g_w, k, lloyd_iters)
+        # same accounting as the SOCCER coreset uplink: every machine
+        # with any coreset mass ships its full fixed-width t-row block
+        # (weight-0 padding rows ride along)
+        machine_up = jnp.any(g_w.reshape(m, t) > 0, axis=1)
+        realized = jnp.sum(machine_up.astype(jnp.int32)) * t
+        return centers, cost, realized
+
+    fn = backend.compile(one_round, ("rep", "machine", "machine"),
+                         ("rep", "rep", "rep"))
+    centers, cost, realized = fn(key, x, w_dev)
+    up = np.asarray([int(realized)], np.int64)
+    return ClusterResult(
+        centers=np.asarray(centers), k=k, algo="coreset_kmeans",
+        backend=backend.name, rounds=1, uplink_points=up,
+        uplink_bytes=uplink_bytes(up, d, dtype=ud),
+        extra={"blackbox_cost": float(cost), "coreset_rows_per_machine": t,
+               "bicriteria": kb})
+
+
+# Its uplink is a coreset by construction, so fit(uplink_mode="coreset")
+# is a (validated) no-op rather than an error — lets sweep conditions
+# apply one composed-compression condition across soccer AND this.
+fit_coreset_kmeans.supports_uplink_mode = True

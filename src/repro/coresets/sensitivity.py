@@ -1,0 +1,99 @@
+"""Per-machine sensitivity-sampling coreset construction.
+
+The classic recipe (Feldman-Langberg; Bachem et al.; the distributed
+form of Balcan et al. 2013), jit/vmap-compatible with static shapes:
+
+1. **Bicriteria solve** B: weighted k-means++ seeding with ``kb``
+   centers (each step is one fused sweep via
+   ``kernels.ops.update_min_dist`` — see ``core.kmeans``). Any O(1)
+   approximation works; seeding alone is the standard cheap choice.
+2. **Sensitivity scores**: one fused sweep
+   (``kernels.ops.sensitivity_scores``) yields per-point weighted cost
+   shares, assignments, per-cluster weight masses and cost(B), from
+   which the standard sensitivity upper bound is assembled with
+   (n,)-sized arithmetic only::
+
+       sigma_i = w_i * d2_i / cost(B)  +  w_i / (|live B| * mass(B_i))
+
+   The first term catches cost outliers, the second guards points in
+   tiny clusters (which can dominate the cost under some center sets
+   despite a small current share).
+3. **Importance sample** ``t`` points iid with probability
+   ``p ∝ sigma`` (with replacement; duplicates carry split weight) and
+   attach the Horvitz-Thompson coreset weight ``u = w / (t * p)``, so
+   every weighted cost estimate over the coreset is unbiased:
+   ``E[sum_j u_j f(x_j)] = sum_i w_i f(x_i)`` for any per-point cost
+   ``f``. Relative error concentrates like ``O(sqrt(S / t))`` with
+   ``S = sum_i sigma_i <= 2`` (tests/test_coresets.py checks this bound
+   on the paper's Zipf mixture).
+
+Degenerate inputs degrade safely: zero-weight (dead/padded) points have
+``sigma = 0`` and are never drawn; an all-zero-weight shard returns an
+all-weight-0 coreset (rows are uploaded but carry no mass).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans_plusplus
+from repro.kernels import ops
+
+
+def default_coreset_size(k: int, n: Optional[int] = None) -> int:
+    """Default total coreset budget: enough rows for a stable weighted
+    clustering at the target k (theory wants O(k·log/eps^2); this is the
+    pragmatic CPU-scale floor), never more than the data itself."""
+    total = max(128, 40 * k)
+    return min(total, n) if n else total
+
+
+def sensitivity_sigma(x: jax.Array, w: jax.Array, centers: jax.Array,
+                      c_valid: Optional[jax.Array] = None) -> jax.Array:
+    """(n,) sensitivity upper bounds of (x, w) against ``centers``.
+
+    One fused sweep of ``x`` (``ops.sensitivity_scores``); everything
+    else is (n,)/(k,)-sized. Zero-weight points get sigma = 0.
+    """
+    scores, assign, mass, cost = ops.sensitivity_scores(x, w, centers,
+                                                        c_valid)
+    live = jnp.maximum(jnp.sum((mass > 0).astype(jnp.float32)), 1.0)
+    cost_term = jnp.where(cost > 0, scores / jnp.maximum(cost, 1e-30), 0.0)
+    mass_at = jnp.maximum(mass[assign], 1e-30)
+    wf = w.astype(jnp.float32)
+    cluster_term = wf / (live * mass_at)
+    return jnp.where(wf > 0, cost_term + cluster_term, 0.0)
+
+
+def build_coreset(key: jax.Array, x: jax.Array, w: jax.Array, t: int,
+                  kb: int) -> Tuple[jax.Array, jax.Array]:
+    """Compress weighted points (x, w) to a t-row sensitivity coreset.
+
+    Args:
+      key: PRNG key.
+      x: (n, d) points (any UPLINK_DTYPES precision).
+      w: (n,) nonneg weights; 0 marks padded/dead rows (never sampled).
+      t: static coreset size (rows; duplicates allowed).
+      kb: static bicriteria center count (O(k) of the target clustering).
+
+    Returns:
+      pts: (t, d) sampled points (same dtype as ``x``).
+      wts: (t,) float32 HT coreset weights (sum ~ sum(w), unbiased).
+    """
+    k_seed, k_draw = jax.random.split(key)
+    centers = kmeans_plusplus(k_seed, x, w, kb)
+    sigma = sensitivity_sigma(x, w, centers)
+    total = jnp.sum(sigma)
+    p = sigma / jnp.maximum(total, 1e-30)
+    # t iid draws by inverse CDF: O(n + t) memory, unlike categorical's
+    # (t, n) Gumbel panel (t can be thousands of rows per machine)
+    cdf = jnp.cumsum(p)
+    u = jax.random.uniform(k_draw, (t,)) * cdf[-1]
+    idx = jnp.clip(jnp.searchsorted(cdf, u), 0, p.shape[0] - 1)
+    pw = p[idx]
+    wts = jnp.where((pw > 0) & (total > 0),
+                    w[idx].astype(jnp.float32)
+                    / (t * jnp.maximum(pw, 1e-38)), 0.0)
+    return x[idx], wts

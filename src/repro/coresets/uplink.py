@@ -1,0 +1,73 @@
+"""Coreset-compressed uplink for SOCCER (``uplink_mode="coreset"``).
+
+The paper's round uploads |P1| = |P2| = eta raw sample points; at a fixed
+coordinator capacity that couples the uplink volume to the sample size.
+Here each machine still draws its apportioned share of the eta-point
+uniform sample (identical statistics, identical HT weights), but then
+compresses the draw to a ``t``-row sensitivity coreset *machine-side*
+before the upload — the coordinator receives m·t weighted rows that
+approximate the sample's weighted distribution. Uplink size becomes a
+knob (``coreset_size``) independent of eta: the sample can stay as large
+as the stopping-rule analysis wants while the wire carries a fraction of
+it. Composes with ``uplink_dtype`` (the coreset points are quantized like
+any other payload) and with both backends (the gather is the fixed-width
+``gather_weighted`` concatenation).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sampling import (apportion, gather_weighted, sample_local)
+from repro.coresets.sensitivity import build_coreset
+
+
+def draw_coreset_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
+                        alive: jax.Array, n_vec_resp: jax.Array,
+                        total: int, cap: int, t: int, kb: int,
+                        upload_dtype: str = "float32"
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array]:
+    """Exact-size global sample, coreset-compressed before the upload.
+
+    Args:
+      x: (local_m, p, d); w: (local_m, p) data weights;
+      alive: (local_m, p).
+      n_vec_resp: (m,) live counts of responding machines (0 = skipped).
+      total: global sample size (static, eta); cap: per-machine buffer.
+      t: static per-machine coreset rows (the uplink knob).
+      kb: static bicriteria center count for the machine-side solve.
+      upload_dtype: payload precision (see ``core.sampling``).
+
+    Returns:
+      pts:  (m*t, d) coreset points in the uplink storage dtype,
+            replicated.
+      wts:  (m*t,) float32 coreset weights (HT over both the uniform
+            draw and the sensitivity sampling: their total estimates the
+            live population mass, like ``draw_global_sample``'s).
+      uplink_rows: () int32 — rows actually uploaded (machines whose
+            sample quota is 0 upload nothing).
+      sample_real: () int32 — realized size of the *underlying* uniform
+            sample (drives the paper's alpha = |P1|/N threshold scaling;
+            compression changes the wire format, not the statistics).
+    """
+    ids = comm.machine_ids()
+    c_vec = apportion(n_vec_resp, total)
+    my_c = c_vec[ids]
+    k_draw, k_core = jax.random.split(key)
+    keys_d = jax.vmap(jax.random.fold_in, (None, 0))(k_draw, ids)
+    keys_c = jax.vmap(jax.random.fold_in, (None, 0))(k_core, ids)
+    idx, take = jax.vmap(sample_local, (0, 0, 0, None))(keys_d, alive,
+                                                        my_c, cap)
+    pts = jnp.take_along_axis(x, idx[..., None], axis=1)  # (local_m, cap, d)
+    w_pt = jnp.take_along_axis(w, idx, axis=1)
+    n_local = jnp.sum(alive, axis=1).astype(jnp.float32)
+    ht = n_local / jnp.maximum(my_c.astype(jnp.float32), 1.0)
+    w_s = w_pt * ht[:, None] * take.astype(jnp.float32)   # HT-weighted draw
+    cpts, cw = jax.vmap(build_coreset, (0, 0, 0, None, None))(
+        keys_c, pts, w_s, t, kb)
+    g_pts, g_w = gather_weighted(comm, cpts, cw, upload_dtype)
+    uplink_rows = jnp.sum((c_vec > 0).astype(jnp.int32)) * t
+    return g_pts, g_w, uplink_rows, jnp.sum(c_vec)

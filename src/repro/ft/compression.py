@@ -1,15 +1,27 @@
-"""Gradient compression for data-parallel sync: top-k + error feedback.
+"""Payload compression: affine int8 quantization + top-k error feedback.
 
-For DP groups where the interconnect (not compute) bounds step time, each
-machine sends only its top-k magnitude gradient entries (values+indices,
-8 bytes each) instead of the dense tensor; the residual goes into a local
-error-feedback accumulator so nothing is lost, only delayed (Stich et al.;
-SGD converges under EF). Communication per machine per step drops from
-2·|g|·4 bytes (ring all-reduce) to m·k·8 gather bytes.
+Two independent wire-shrinking mechanisms live here:
 
-Runs over the same comm abstraction as SOCCER, so the single-device tests
-measure real convergence; on a mesh the gather is one all-gather of the
-(k,) value/index pairs.
+* **Affine int8 quantization** — the ``uplink_dtype="int8"`` path of the
+  clustering uplinks (the hook promised in ``core.sampling.
+  quantize_uplink``). A payload is mapped to 256 levels spanning its own
+  range: ``q = round((x - zp) / scale)``; the 8-byte (scale, zero-point)
+  pair is per payload per round and rides the metadata channel alongside
+  the count vector and HT weights (in mesh mode each machine quantizes
+  with its own pair — a per-machine code book). ``fake_quantize_int8``
+  returns the dequantized reconstruction so downstream clustering needs
+  no int8 kernels; accounting charges 1 byte/coordinate.
+
+* **Top-k + error feedback** — for DP groups where the interconnect (not
+  compute) bounds step time, each machine sends only its top-k magnitude
+  gradient entries (values + int32 indices) instead of the dense tensor;
+  the residual goes into a local error-feedback accumulator so nothing
+  is lost, only delayed (Stich et al.; SGD converges under EF).
+  Communication per machine per step drops from 2·|g|·4 bytes (ring
+  all-reduce) to m·k·(itemsize+4) gather bytes.
+
+Both run over the same comm abstraction as SOCCER, so the single-device
+tests measure real convergence; on a mesh the gather is one all-gather.
 """
 from __future__ import annotations
 
@@ -17,6 +29,47 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def affine_qparams(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-payload affine code book: (scale, zero_point) spanning
+    [min, max] with 256 levels (degenerate constant payloads get a tiny
+    positive scale so dequantization is exact).
+
+    A 2-d payload (one machine's — or one replicated — (rows, d) block)
+    gets scalar qparams; higher-rank payloads are (machine, rows, d)
+    batches and get one code book PER LEADING ENTRY, so the virtual
+    backend (local_m = m) and the mesh backend (local_m = 1) quantize
+    each machine's block identically and fit() results agree across
+    backends."""
+    xf = x.astype(jnp.float32)
+    axes = tuple(range(xf.ndim - 2, xf.ndim)) if xf.ndim > 2 else None
+    lo = jnp.min(xf, axis=axes, keepdims=axes is not None)
+    hi = jnp.max(xf, axis=axes, keepdims=axes is not None)
+    scale = jnp.maximum((hi - lo) / 255.0, 1e-12)
+    return scale, lo
+
+
+def quantize_affine_int8(x: jax.Array, scale: jax.Array,
+                         zp: jax.Array) -> jax.Array:
+    """f32 -> int8 codes in [-128, 127] (level 0 at the payload min)."""
+    q = jnp.round((x.astype(jnp.float32) - zp) / scale)
+    return (jnp.clip(q, 0.0, 255.0) - 128.0).astype(jnp.int8)
+
+
+def dequantize_affine_int8(q: jax.Array, scale: jax.Array,
+                           zp: jax.Array) -> jax.Array:
+    """int8 codes -> f32 reconstruction on the 256-level grid."""
+    return (q.astype(jnp.float32) + 128.0) * scale + zp
+
+
+def fake_quantize_int8(x: jax.Array) -> jax.Array:
+    """Quantize-dequantize round trip: float32 values ON the int8 grid —
+    exactly what the coordinator decodes from an int8 upload."""
+    scale, zp = affine_qparams(x)
+    return dequantize_affine_int8(quantize_affine_int8(x, scale, zp),
+                                  scale, zp)
 
 
 def topk_compress(g: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
@@ -49,7 +102,9 @@ def compressed_psum(comm, g: jax.Array, err: jax.Array, k: int
     sparse, vals, idx = jax.vmap(one)(corrected)
     new_err = corrected - sparse
     total = comm.psum(sparse) / comm.m
-    comm_bytes = jnp.int32(comm.m * k * 8)
+    # actual wire widths (value dtype + int32 index), as a python int so
+    # report rows stay JSON-serializable (jnp.int32 is not)
+    comm_bytes = int(comm.m) * int(k) * (np.dtype(g.dtype).itemsize + 4)
     return total, new_err, comm_bytes
 
 

@@ -27,6 +27,11 @@ ref-vs-pallas by tests/test_kernel_conformance.py — ``make test-kernels``):
     lower the running min-d2 against newly chosen center(s) and total the
     weighted sampling mass, one sweep of ``x`` (adopted by k-means++,
     minibatch seeding and the sharded-coordinator seeding paths).
+  * ``sensitivity_scores(x, w, c, c_valid)`` — fused coreset sensitivity
+    pass (repro.coresets): per-point weighted cost shares, assignment,
+    per-center cluster masses and the total cost of the bicriteria
+    centers in one sweep of ``x`` (replaces a min_dist ->
+    lloyd_reduce-counts -> cost-reduction chain).
 
 Shape guards: feature dims above ``_MAX_PALLAS_D`` fall back to the XLA
 oracle path. Center counts above ``_MAX_PALLAS_K`` no longer fall back:
@@ -53,6 +58,7 @@ from repro.kernels.fused_lloyd import (fused_assign_reduce_chunked_pallas,
                                        update_min_dist_pallas)
 from repro.kernels.lloyd import lloyd_reduce_pallas
 from repro.kernels.min_dist import min_dist_pallas
+from repro.kernels.sensitivity import sensitivity_scores_pallas
 
 _MAX_PALLAS_D = 512   # larger feature dims fall back to the XLA path
 _MAX_PALLAS_K = 1024  # fused kernels keep all centers in VMEM up to this;
@@ -60,7 +66,7 @@ _MAX_PALLAS_K = 1024  # fused kernels keep all centers in VMEM up to this;
 
 # The public kernel surface; the conformance harness iterates over this.
 ENTRY_POINTS = ("min_dist", "lloyd_reduce", "fused_assign_reduce",
-                "remove_below", "update_min_dist")
+                "remove_below", "update_min_dist", "sensitivity_scores")
 
 
 def _backend(explicit: Optional[str]) -> str:
@@ -166,3 +172,32 @@ def update_min_dist(x: jax.Array, w: jax.Array, c: jax.Array,
                                               d2, cv, interpret=interpret)
         return d2, mass
     return ref.update_min_dist_ref(x, w, c, d2, c_valid)
+
+
+def sensitivity_scores(x: jax.Array, w: jax.Array, c: jax.Array,
+                       c_valid: Optional[jax.Array] = None,
+                       *, backend: Optional[str] = None
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array]:
+    """Fused coreset sensitivity pass: ((n,) w·min-d2 scores, (n,) argmin
+    assignment, (k,) per-center weight mass, () weighted cost of ``c``).
+
+    One HBM sweep of ``x`` with the center set resident (the chain it
+    replaces reads ``x`` three times — see kernels/sensitivity.py).
+    Center sets beyond ``_MAX_PALLAS_K`` never arise on the coreset path
+    (the bicriteria solution has O(k) centers), so instead of a chunked
+    twin the sweep runs through the tiled ``min_dist`` kernel and the
+    (n,)/(k,)-sized reductions (which never touch ``x``) run in XLA.
+    Requires at least one valid center (guaranteed by the k-means++
+    bicriteria seeding); with all centers invalid the oracle's +inf and
+    the kernel's finite sentinel diverge.
+    """
+    b = _backend(backend)
+    if b == "pallas" and x.shape[-1] <= _MAX_PALLAS_D:
+        interpret = jax.default_backend() != "tpu"
+        if c.shape[0] <= _MAX_PALLAS_K:
+            return sensitivity_scores_pallas(x, w, c, c_valid,
+                                             interpret=interpret)
+        d2, assign = min_dist_pallas(x, c, c_valid, interpret=interpret)
+        return ref.sensitivity_from_min(w, d2, assign, c.shape[0])
+    return ref.sensitivity_scores_ref(x, w, c, c_valid)

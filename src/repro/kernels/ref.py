@@ -108,6 +108,53 @@ def update_min_dist_ref(x: jax.Array, w: jax.Array, c: jax.Array,
     return d2_new, mass
 
 
+def sensitivity_from_min(w: jax.Array, d2: jax.Array, assign: jax.Array,
+                         k: int) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                          jax.Array]:
+    """(scores, assign, mass, cost) from a completed min-distance pass.
+
+    The shared tail of the sensitivity oracle and the chunked-K dispatch
+    path in ``kernels/ops.py``: everything here is (n,)/(k,)-sized — no
+    sweep of ``x``.
+    """
+    wf = w.astype(jnp.float32)
+    scores = wf * d2.astype(jnp.float32)
+    mass = jax.ops.segment_sum(wf, assign, num_segments=k)
+    return scores, assign, mass, jnp.sum(scores)
+
+
+def sensitivity_scores_ref(x: jax.Array, w: jax.Array, c: jax.Array,
+                           c_valid: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                      jax.Array]:
+    """Oracle for the coreset sensitivity pass (repro.coresets).
+
+    Sensitivity sampling needs, per point, its weighted cost share
+    against a bicriteria solution B and the weight mass of its B-cluster;
+    the Pallas kernel produces all of it in ONE sweep of ``x`` instead of
+    the min_dist -> lloyd_reduce-counts -> cost-reduction chain.
+
+    Requires at least one valid center (the coreset builder seeds B with
+    k-means++, which guarantees it); with zero valid centers the oracle's
+    +inf distances and the kernel's finite sentinel diverge.
+
+    Args:
+      x: (n, d) points.
+      w: (n,) float weights (0 for padded rows).
+      c: (k, d) bicriteria centers B.
+      c_valid: optional (k,) bool mask; invalid centers are ignored.
+
+    Returns:
+      scores: (n,) float32 — w_i * min-d2_i (the cost term's numerator).
+      assign: (n,) int32   — argmin center per point.
+      mass:   (k,) float32 — sum of w over the points assigned to each
+              center (invalid centers receive no mass).
+      cost:   ()   float32 — sum of scores (weighted cost of B).
+    """
+    d2, assign = min_dist_ref(x, c, c_valid)
+    return sensitivity_from_min(w, d2, assign, c.shape[0])
+
+
 def lloyd_reduce_ref(x: jax.Array, w: jax.Array, assign: jax.Array,
                      k: int) -> Tuple[jax.Array, jax.Array]:
     """Weighted per-center accumulation for one Lloyd step.

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused coreset sensitivity pass.
+
+Sensitivity sampling (repro.coresets) scores every point against a small
+bicriteria solution B before importance-sampling the shard down to a
+weighted (t, d) summary. Unfused, the scoring chain streams ``x`` through
+HBM three times: a min-distance pass, a per-center weight reduction for
+the cluster masses, and a weighted cost reduction. The kernel here makes
+exactly one grid walk over (bn, d) point panels with the (padded) center
+set resident in VMEM and produces all four outputs of that chain:
+
+* ``scores`` (n,) — w_i * min-d2_i, each panel's masked (min, argmin)
+  driven through the MXU exactly like ``fused_assign_reduce``;
+* ``assign`` (n,) — the argmin center (the coreset builder gathers each
+  point's cluster mass through it);
+* ``mass``   (k,) — per-center weight totals via the weighted one-hot,
+  accumulated in VMEM across panels;
+* ``cost``   ()  — the weighted cost of B (the scores' normalizer).
+
+Unlike ``fused_assign_reduce`` the per-point outputs are written OUT (the
+coreset builder needs them), so HBM traffic is one read of ``x`` plus two
+(n,) writes — still ~3x less than the unfused chain.
+
+Center sets beyond ``ops._MAX_PALLAS_K`` do not come up on the coreset
+path (B has O(k) centers), so there is no chunked twin: ``ops.py``
+composes the tiled ``min_dist`` kernel with the (n,)-sized oracle tail
+instead (see ``sensitivity_scores`` there).
+
+All inputs may be float32, bfloat16 or float16 (every ``UPLINK_DTYPES``
+precision); accumulation is float32. Block sizes come from the shared
+autotune table in ``kernels.tuning``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fused_lloyd import _panel_min
+from repro.kernels.tuning import block_sizes, clamp_bn
+
+
+def _sensitivity_kernel(x_ref, w_ref, c_ref, cv_ref,
+                        scores_ref, assign_ref, mass_ref, cost_ref,
+                        *, kp: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        mass_ref[...] = jnp.zeros(mass_ref.shape, jnp.float32)
+        cost_ref[...] = jnp.zeros(cost_ref.shape, jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)              # (bn, d)
+    w = w_ref[...].astype(jnp.float32)              # (bn,)
+    c = c_ref[...].astype(jnp.float32)              # (kp, d)
+    dmin, a = _panel_min(x, c, cv_ref[...])
+
+    s = w * dmin
+    scores_ref[...] = s
+    assign_ref[...] = a.astype(jnp.int32)
+
+    centers = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], kp), 1)
+    onehot = (a.astype(jnp.int32)[:, None] == centers
+              ).astype(jnp.float32) * w[:, None]    # (bn, kp)
+    mass_ref[...] += jnp.sum(onehot, axis=0)
+    cost_ref[0, 0] += jnp.sum(s)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sensitivity_scores_pallas(x: jax.Array, w: jax.Array, c: jax.Array,
+                              c_valid: Optional[jax.Array] = None,
+                              *, interpret: bool = False
+                              ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                         jax.Array]:
+    """One-sweep sensitivity pass: ((n,) scores, (n,) assign, (k,) mass,
+    () cost). Semantics == ``kernels.ref.sensitivity_scores_ref``."""
+    n, d = x.shape
+    k = c.shape[0]
+    if c_valid is None:
+        c_valid = jnp.ones((k,), jnp.int8)
+    else:
+        c_valid = c_valid.astype(jnp.int8)
+
+    bn, _ = block_sizes(d, k)
+    kp = -(-k // 128) * 128                          # centers stay resident
+    if kp >= 512:                                    # keep the (bn, kp) one-hot
+        bn = min(bn, 256)                            # inside the VMEM budget
+    bn = clamp_bn(bn, n)
+    xp = jnp.pad(x, ((0, -n % bn), (0, 0)))
+    wp = jnp.pad(w, (0, -n % bn))                    # weight-0 rows are no-ops
+    cp = jnp.pad(c, ((0, kp - k), (0, 0)))
+    cvp = jnp.pad(c_valid, (0, kp - k))              # padded centers invalid
+
+    grid = (xp.shape[0] // bn,)
+    scores, assign, mass, cost = pl.pallas_call(
+        functools.partial(_sensitivity_kernel, kp=kp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((kp, d), lambda i: (0, 0)),
+            pl.BlockSpec((kp,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((kp,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((xp.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((kp,), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wp, cp, cvp)
+    return scores[:n], assign[:n], mass[:k], cost[0, 0]

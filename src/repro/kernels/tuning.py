@@ -1,7 +1,8 @@
 """Shared block-size autotune table for the clustering kernels.
 
-One table serves ``min_dist``, ``fused_assign_reduce`` and ``remove_below``
-(and the point-panel size of ``lloyd_reduce``): all four stream (bn, d)
+One table serves ``min_dist``, ``fused_assign_reduce``, ``remove_below``
+and ``sensitivity_scores`` (and the point-panel size of
+``lloyd_reduce``): all of them stream (bn, d)
 point panels against a center panel set, so the right block sizes depend
 only on (d, k). Keys are the (d, k) buckets below; values are (bn, bk)
 chosen so the resident f32 panels — x (bn, d), centers (bk, d), the

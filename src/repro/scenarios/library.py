@@ -182,6 +182,88 @@ def faulty_cluster() -> Scenario:
 
 
 @register_scenario
+def coreset_budget() -> Scenario:
+    """Coresets vs SOCCER vs k-means‖ at one coordinator uplink budget.
+
+    Every competitor gets the same per-round uplink allowance B = 2·eta
+    points: SOCCER uploads |P1|+|P2| = B raw sample points per round,
+    ``coreset_kmeans`` ships its whole one-round m-machine coreset union
+    of B rows, and k-means‖ grows its candidate set by B/rounds per
+    round. The ``coreset_uplink`` condition then compresses SOCCER's own
+    per-round upload to eta/2 coreset rows (``uplink_mode="coreset"``) —
+    the axis the paper's coordinator-capacity tradeoff is about, now a
+    knob independent of the sample size.
+    """
+    def eta(quick):
+        # comfortably in the one-round regime at both sizes: the point
+        # here is the uplink-budget comparison, not the stopping rule
+        # (heavy_tailed owns the multi-round regime)
+        return 1600 if quick else 4000
+
+    return Scenario(
+        name="coreset_budget",
+        summary="coreset_kmeans vs SOCCER vs k-means|| at equal uplink "
+                "budget B=2·eta; plus SOCCER's own coreset uplink",
+        make_data=lambda quick: _zipf_data(quick, seed=43),
+        k=_FULL_K, quick_k=_QUICK_K,
+        algos=("soccer", "kmeans_parallel", "coreset_kmeans"),
+        algo_params={
+            # coreset_size is inert under the baseline (points) condition
+            # and sizes the compressed uplink at eta/2 rows under
+            # coreset_uplink — enough for the k_plus-center black box
+            "soccer": lambda quick: dict(eta_override=eta(quick),
+                                         coreset_size=eta(quick) // 2),
+            "kmeans_parallel": lambda quick: dict(
+                rounds=3, l=float(2 * eta(quick) // 3), lloyd_iters=15),
+            "coreset_kmeans": lambda quick: dict(
+                coreset_size=2 * eta(quick)),
+        },
+        conditions=(
+            Condition("baseline"),
+            Condition("coreset_uplink", dict(uplink_mode="coreset"),
+                      algos=("soccer",),
+                      note="SOCCER per-round uplink coreset-compressed "
+                           "to eta/2 rows"),
+        ))
+
+
+@register_scenario
+def int8_coreset() -> Scenario:
+    """Composed uplink compression: affine int8 payloads x coreset rows.
+
+    ``uplink_dtype="int8"`` (ft/compression) cuts bytes 4x at fixed
+    rows; ``uplink_mode="coreset"`` cuts rows at fixed dtype; the
+    composed condition multiplies the two. Cost must stay at the
+    well-separated mixture's noise floor throughout.
+    """
+    return Scenario(
+        name="int8_coreset",
+        summary="int8 quantized uplink composed with coreset compression",
+        make_data=lambda quick: _zipf_data(quick, seed=47),
+        k=_FULL_K, quick_k=_QUICK_K,
+        algos=("soccer", "coreset_kmeans"),
+        algo_params={
+            "soccer": lambda quick: dict(
+                eta_override=1600 if quick else 4000,
+                coreset_size=800 if quick else 2000),
+            "coreset_kmeans": lambda quick: dict(
+                coreset_size=3200 if quick else 8000),
+        },
+        conditions=(
+            Condition("fp32"),
+            # the dtype-only axis, on SOCCER (coreset_kmeans's composed
+            # cell below already covers its int8 leg — keeps the quick
+            # sweep inside its CI wall-time budget)
+            Condition("int8", dict(uplink_dtype="int8"),
+                      algos=("soccer",),
+                      note="affine int8 payloads (ft/compression)"),
+            Condition("int8_coreset", dict(uplink_dtype="int8",
+                                           uplink_mode="coreset"),
+                      note="int8 x coreset-compressed uplink"),
+        ))
+
+
+@register_scenario
 def bf16_uplink() -> Scenario:
     """Reduced-precision uplink: points are rounded to bfloat16 before
     the machine->coordinator upload, halving ``uplink_bytes`` at (for

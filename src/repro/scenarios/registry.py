@@ -71,6 +71,12 @@ class Scenario:
     growing ``rounds`` until their cost is within ``match_tol`` of the
     same-condition SOCCER cell (paper Table 3's protocol), and the cell
     reports the matched round count.
+
+    ``algos`` (when set) pins the scenario's algorithm list, overriding
+    the sweep-wide default — for scenarios whose point is a specific
+    head-to-head (e.g. the coreset-budget comparison needs
+    ``coreset_kmeans`` in the row even though it is not a sweep
+    default).
     """
     name: str
     summary: str
@@ -78,6 +84,7 @@ class Scenario:
     k: int
     quick_k: Optional[int] = None
     m: int = 8
+    algos: Optional[Tuple[str, ...]] = None
     shard_policy: object = "shuffle"
     conditions: Tuple[Condition, ...] = (Condition(),)
     common_params: Mapping = dataclasses.field(default_factory=dict)

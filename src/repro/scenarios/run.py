@@ -27,7 +27,9 @@ def main(argv=None) -> int:
                     help="scenario tag (e.g. paper) or comma-separated "
                          "scenario names")
     ap.add_argument("--algos", default=",".join(DEFAULT_ALGOS),
-                    help="comma-separated fit() algorithms")
+                    help="comma-separated fit() algorithms (scenarios "
+                         "with a pinned algos list — e.g. coreset_budget "
+                         "— run their own list regardless)")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized data (each cell a few seconds)")
     ap.add_argument("--seed", type=int, default=0)

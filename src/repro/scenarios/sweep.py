@@ -119,7 +119,11 @@ def run_scenario(scenario: Scenario, algos: Sequence[str] = DEFAULT_ALGOS,
                  quick: bool = True, seed: int = 0,
                  backend="virtual") -> list:
     """All algo x condition cells of one scenario (SOCCER cells first, so
-    match_rounds cells have their cost target)."""
+    match_rounds cells have their cost target). A scenario with a pinned
+    ``algos`` list runs exactly those algorithms regardless of the
+    sweep-wide selection."""
+    if scenario.algos is not None:
+        algos = scenario.algos
     data = scenario.make_data(quick)
     k = scenario.k_for(quick)
     base_cost = exact_baseline(data, k, seed, scenario.baseline_iters)

@@ -20,10 +20,11 @@ TINY = {
     "eim11": dict(epsilon=0.2, max_rounds=3),
     "lloyd": dict(iters=5),
     "minibatch": dict(batch=128, steps=10),
+    "coreset_kmeans": dict(coreset_size=512, lloyd_iters=5),
 }
 # upper bound on communication rounds for each algorithm at TINY params
 MAX_ROUNDS = {"soccer": 7 + 1, "kmeans_parallel": 2, "eim11": 3,
-              "lloyd": 1, "minibatch": 1}
+              "lloyd": 1, "minibatch": 1, "coreset_kmeans": 1}
 
 
 @pytest.fixture(scope="module")
@@ -49,7 +50,7 @@ def test_registry_all_algos_well_formed(data):
     d = parts.shape[-1]
     algos = list_algorithms()
     assert set(algos) >= {"soccer", "kmeans_parallel", "eim11", "lloyd",
-                          "minibatch"}
+                          "minibatch", "coreset_kmeans"}
     for algo in algos:
         res = fit(parts, K, algo=algo, backend="virtual", seed=0,
                   **TINY.get(algo, {}))

@@ -1,0 +1,182 @@
+"""Coreset subsystem: construction guarantees, the coreset_kmeans
+baseline, SOCCER's uplink_mode="coreset", and int8 uplink accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import fit
+from repro.configs.soccer_paper import GaussianMixtureSpec, SoccerParams
+from repro.core.kmeans import kmeans_plusplus
+from repro.coresets import build_coreset, sensitivity_sigma
+from repro.data.synthetic import gaussian_mixture
+
+K = 8
+
+
+@pytest.fixture(scope="module")
+def zipf():
+    spec = GaussianMixtureSpec(n=6144, dim=15, k=K, sigma=0.001, seed=17)
+    x, _, means = gaussian_mixture(spec)
+    return jnp.asarray(x), means
+
+
+# ----------------------------------------------------- construction
+def test_sigma_properties(zipf):
+    x, _ = zipf
+    w = jnp.ones((x.shape[0],), jnp.float32).at[:100].set(0.0)
+    centers = kmeans_plusplus(jax.random.PRNGKey(0), x, w, K)
+    sigma = sensitivity_sigma(x, w, centers)
+    sigma = np.asarray(sigma)
+    assert (sigma >= 0).all()
+    assert (sigma[:100] == 0).all()            # zero-weight: never drawn
+    # sum sigma <= 2 for the standard bound (cost shares sum to 1, the
+    # cluster terms to live/|live| = 1)
+    assert sigma.sum() <= 2.0 + 1e-4
+
+
+def test_coreset_weights_unbiased(zipf):
+    """HT coreset weights estimate the population mass."""
+    x, _ = zipf
+    n = x.shape[0]
+    w = jnp.ones((n,), jnp.float32)
+    _, u = build_coreset(jax.random.PRNGKey(1), x, w, 2048, K)
+    assert float(jnp.sum(u)) == pytest.approx(n, rel=0.1)
+
+
+def test_coreset_cost_within_sampling_bound(zipf):
+    """Sampling theory: for any fixed center set, the coreset-weighted
+    cost is within ~O(sqrt(S/t)) relative error of the full-data cost
+    (S = sum of sensitivities <= 2). Checked on the paper's Zipf mixture
+    for several center sets — near-optimal, perturbed, and adversarially
+    coarse — with a constant-slack bound."""
+    from repro.core.metrics import centralized_cost
+    x, means = zipf
+    n, d = x.shape
+    w = jnp.ones((n,), jnp.float32)
+    t = 1536
+    bound = 6.0 * float(np.sqrt(2.0 / t))      # ~0.22 relative error
+    rng = np.random.default_rng(0)
+    center_sets = [
+        jnp.asarray(means),                                  # near-opt
+        jnp.asarray(means + rng.normal(0, 0.05, means.shape)
+                    .astype(np.float32)),                    # perturbed
+        kmeans_plusplus(jax.random.PRNGKey(3), x, w, 3),     # too-coarse
+    ]
+    for seed in (0, 1):
+        pts, u = build_coreset(jax.random.PRNGKey(seed), x, w, t, K)
+        for c in center_sets:
+            full = float(centralized_cost(x, c))
+            core = float(centralized_cost(pts, c, u))
+            assert abs(core - full) <= bound * full, \
+                (seed, full, core, bound)
+
+
+def test_coreset_dead_shard_is_weightless(zipf):
+    x, _ = zipf
+    w0 = jnp.zeros((x.shape[0],), jnp.float32)
+    pts, u = build_coreset(jax.random.PRNGKey(2), x, w0, 64, 4)
+    assert pts.shape == (64, x.shape[1])
+    assert float(jnp.max(jnp.abs(u))) == 0.0
+
+
+# ------------------------------------------------- coreset_kmeans
+def test_coreset_kmeans_one_round_baseline(zipf):
+    x, _ = zipf
+    res = fit(np.asarray(x), K, algo="coreset_kmeans", backend="virtual",
+              m=8, seed=0, coreset_size=2048)
+    assert res.rounds == 1
+    assert res.uplink_points_total == 2048     # 256 rows x 8 machines
+    assert np.array_equal(res.uplink_bytes, res.uplink_points * 15 * 4)
+    full = fit(np.asarray(x), K, algo="lloyd", backend="virtual", m=8,
+               seed=0, iters=25)
+    # 3x less uplink than one round of full gather, comparable cost
+    assert res.uplink_points_total * 3 <= full.uplink_points_total
+    assert res.cost(x) <= 1.5 * full.cost(x)
+
+
+def test_coreset_kmeans_composes_with_uplink_dtype(zipf):
+    x, _ = zipf
+    r32 = fit(np.asarray(x), K, algo="coreset_kmeans", backend="virtual",
+              m=8, seed=0, coreset_size=1024)
+    r8 = fit(np.asarray(x), K, algo="coreset_kmeans", backend="virtual",
+             m=8, seed=0, coreset_size=1024, uplink_dtype="int8")
+    assert r8.uplink_bytes_total * 4 == r32.uplink_bytes_total
+    assert r8.cost(x) <= 3.0 * r32.cost(x)
+
+
+def test_coreset_kmeans_validation():
+    x = np.zeros((256, 3), np.float32)
+    with pytest.raises(ValueError, match="blackbox"):
+        fit(x, 2, algo="coreset_kmeans", m=4, blackbox="exact")
+    with pytest.raises(ValueError, match="contradictory"):
+        fit(x, 2, algo="coreset_kmeans", m=4, uplink_mode="points")
+
+
+# ------------------------------------------------- SOCCER coreset uplink
+def test_soccer_uplink_mode_coreset_shrinks_uplink(zipf):
+    x, _ = zipf
+    kw = dict(algo="soccer", backend="virtual", m=8, seed=3, epsilon=0.1,
+              eta_override=1600)
+    base = fit(np.asarray(x), K, **kw)
+    cs = fit(np.asarray(x), K, uplink_mode="coreset", **kw)
+    assert cs.uplink_bytes_total < base.uplink_bytes_total
+    assert cs.params["uplink_mode"] == "coreset"
+    assert cs.rounds >= 1
+    # compression must not wreck the clustering on the easy mixture
+    assert cs.cost(x) <= 2.0 * base.cost(x)
+    # the underlying sample statistics are unchanged, so the stopping
+    # trajectory stays in the same regime
+    assert cs.rounds <= base.rounds + 1
+
+
+def test_soccer_coreset_composes_with_int8(zipf):
+    x, _ = zipf
+    kw = dict(algo="soccer", backend="virtual", m=8, seed=3, epsilon=0.1,
+              eta_override=1600, coreset_size=800)
+    base = fit(np.asarray(x), K, **kw)
+    cs8 = fit(np.asarray(x), K, uplink_mode="coreset",
+              uplink_dtype="int8", **kw)
+    d = x.shape[1]
+    assert np.array_equal(cs8.uplink_bytes, cs8.uplink_points * d * 1)
+    # 4x from the dtype and ~1.7x from the row compression compose
+    assert cs8.uplink_bytes_total * 6 < base.uplink_bytes_total
+    assert cs8.cost(x) <= 3.0 * base.cost(x)
+
+
+def test_uplink_mode_validation():
+    x = np.zeros((256, 3), np.float32)
+    with pytest.raises(ValueError, match="uplink_mode"):
+        fit(x, 2, algo="soccer", m=4, uplink_mode="sketch")
+    with pytest.raises(TypeError, match="uplink_mode"):
+        fit(x, 2, algo="lloyd", m=4, uplink_mode="coreset")
+    with pytest.raises(ValueError, match="sharded"):
+        SoccerParams(k=2, uplink_mode="coreset", sharded_coordinator=True)
+
+
+# ------------------------------------------------------------- int8
+def test_int8_uplink_accounting_and_grid(zipf):
+    x, _ = zipf
+    res32 = fit(np.asarray(x), K, algo="soccer", backend="virtual", m=8,
+                seed=0, epsilon=0.2)
+    res8 = fit(np.asarray(x), K, algo="soccer", backend="virtual", m=8,
+               seed=0, epsilon=0.2, uplink_dtype="int8")
+    d = x.shape[1]
+    assert np.array_equal(res32.uplink_bytes, res32.uplink_points * d * 4)
+    assert np.array_equal(res8.uplink_bytes, res8.uplink_points * d * 1)
+    assert res8.params["uplink_dtype"] == "int8"
+    assert res8.cost(x) <= 3.0 * max(res32.cost(x), 1e-9)
+
+
+def test_fake_quantize_int8_grid():
+    from repro.ft.compression import fake_quantize_int8
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(500, 7)),
+                    jnp.float32)
+    q = fake_quantize_int8(x)
+    levels = np.unique(np.asarray(q))
+    assert len(levels) <= 256
+    span = float(jnp.max(x) - jnp.min(x))
+    assert float(jnp.max(jnp.abs(q - x))) <= span / 255.0 + 1e-6
+    # constant payloads reconstruct exactly
+    const = jnp.full((8, 3), 2.5, jnp.float32)
+    np.testing.assert_allclose(fake_quantize_int8(const), const, atol=1e-6)

@@ -62,7 +62,8 @@ tiny = {"soccer": dict(epsilon=0.2),
         "kmeans_parallel": dict(rounds=2, lloyd_iters=5),
         "eim11": dict(epsilon=0.2, max_rounds=3),
         "lloyd": dict(iters=5),
-        "minibatch": dict(batch=128, steps=10)}
+        "minibatch": dict(batch=128, steps=10),
+        "coreset_kmeans": dict(coreset_size=512, lloyd_iters=5)}
 mesh_ok, mesh_det = {}, {}
 for algo in list_algorithms():
     r = fit(parts, 5, algo=algo, backend=MeshBackend(mesh), seed=4,
@@ -76,6 +77,23 @@ for algo in list_algorithms():
                           and r.rounds == r2.rounds)
 out["mesh_algos"] = mesh_ok
 out["mesh_determinism"] = mesh_det
+
+# coreset-compressed SOCCER uplink: virtual == mesh (same math, the
+# fixed-width weighted gather is an all-gather on the mesh), and the
+# compressed rows are fewer than the raw-sample upload on both
+ckw = dict(epsilon=0.1, seed=3, eta_override=1600, uplink_mode="coreset")
+ccv = fit(parts, 5, algo="soccer", backend="virtual", **ckw)
+ccm = fit(parts, 5, algo="soccer", backend=MeshBackend(mesh), **ckw)
+raw = fit(parts, 5, algo="soccer", backend="virtual", epsilon=0.1, seed=3,
+          eta_override=1600)
+out["coreset_uplink_mesh_matches_virtual"] = bool(
+    ccv.rounds == ccm.rounds
+    and np.array_equal(ccv.uplink_points, ccm.uplink_points)
+    and ccv.centers.shape == ccm.centers.shape
+    and np.allclose(ccv.centers, ccm.centers, atol=1e-3))
+out["coreset_uplink_below_raw"] = bool(
+    ccv.uplink_bytes_total < raw.uplink_bytes_total
+    and ccm.uplink_bytes_total < raw.uplink_bytes_total)
 print("RESULT " + json.dumps(out))
 """
 
@@ -101,7 +119,10 @@ def test_virtual_equals_mesh_subprocess():
     # facade == legacy, bit-identical on both backends
     assert out["facade_virtual_identical"]
     assert out["facade_mesh_identical"]
-    # all five algorithms produce finite results on the mesh backend
+    # all six algorithms produce finite results on the mesh backend
     assert all(out["mesh_algos"].values()), out["mesh_algos"]
     # same seed -> bit-identical centers on the mesh backend
     assert all(out["mesh_determinism"].values()), out["mesh_determinism"]
+    # coreset-compressed uplink: mesh == virtual, fewer bytes than raw
+    assert out["coreset_uplink_mesh_matches_virtual"], out
+    assert out["coreset_uplink_below_raw"], out

@@ -174,6 +174,17 @@ def test_compression_bytes_savings():
     assert m * k * 8 < dense_bytes * m    # per step, this toy size
 
 
+def test_compressed_psum_bytes_dtype_aware():
+    """comm_bytes uses the actual value/index widths (not a hardcoded 8)
+    and is a python int so report rows stay JSON-serializable."""
+    comm = VirtualCluster(4)
+    for dtype, itemsize in ((jnp.float32, 4), (jnp.bfloat16, 2)):
+        g = jnp.ones((4, 32), dtype)
+        _, _, nbytes = compressed_psum(comm, g, init_error_feedback(g), k=8)
+        assert isinstance(nbytes, int)
+        assert nbytes == 4 * 8 * (itemsize + 4), dtype
+
+
 def test_outlier_robust_finalize():
     """Paper §9 future work: with gross outliers injected, the robust
     finalize keeps the INLIER cost near-optimal; the plain variant's

@@ -155,6 +155,33 @@ def test_update_min_dist_conforms(name, n, d, k, dtype):
         assert bool(jnp.all(d2_o <= d2 + 1e-6))
 
 
+@pytest.mark.parametrize("name,n,d,k", POINT_SHAPES, ids=IDS)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16", "f16"])
+def test_sensitivity_scores_conforms(name, n, d, k, dtype):
+    """Coreset sensitivity pass: scores/mass/cost against the oracle over
+    the full boundary grid (k > _MAX_PALLAS_K dispatches to the tiled
+    min_dist sweep + XLA tail, d > _MAX_PALLAS_D to the oracle)."""
+    x, w, c, valid = _data(n, d, k, dtype, seed=6 * n + d + k)
+    tol, tight = _tols(dtype)
+    for cv in (None, valid):
+        s_r, _, m_r, cost_r = ref.sensitivity_scores_ref(x, w, c, cv)
+        s_o, a_o, m_o, cost_o = ops.sensitivity_scores(x, w, c, cv)
+        np.testing.assert_allclose(s_o, s_r, rtol=tol, atol=tol)
+        np.testing.assert_allclose(m_o, m_r, rtol=tight, atol=tight)
+        np.testing.assert_allclose(cost_o, cost_r, rtol=tol, atol=tol)
+        # mass conservation: every unit of weight lands on some center
+        np.testing.assert_allclose(jnp.sum(m_o), jnp.sum(w),
+                                   rtol=tol, atol=tol)
+        # argmin ties may break differently; the chosen center must be
+        # valid and realize the reported score
+        if cv is not None:
+            assert bool(jnp.all(valid[a_o]))
+        d2_at = jnp.sum((x.astype(jnp.float32)
+                         - c.astype(jnp.float32)[a_o]) ** 2, -1)
+        np.testing.assert_allclose(np.asarray(w) * np.asarray(d2_at), s_r,
+                                   rtol=tol, atol=tol)
+
+
 def test_update_min_dist_large_block():
     """A new-center block over _MAX_PALLAS_K (k-means‖ seeding's ~6·k-row
     candidate buffer at large k_plus) runs as sliced resident sweeps on
@@ -224,6 +251,10 @@ def test_all_zero_weights(name, n, d, k):
     d2 = jnp.asarray(rng.random(n), jnp.float32)
     _, mass = ops.update_min_dist(x, w0, c[:3], d2)
     assert float(mass) == 0.0
+    scores, _, smass, cost = ops.sensitivity_scores(x, w0, c)
+    assert float(jnp.max(jnp.abs(scores))) == 0.0
+    assert float(jnp.max(jnp.abs(smass))) == 0.0
+    assert float(cost) == 0.0
 
 
 def test_every_entry_point_covered():
@@ -237,5 +268,5 @@ def test_every_entry_point_covered():
               and getattr(fn, "__module__", "") == ops.__name__
               and "backend" in inspect.signature(fn).parameters}
     covered = {"min_dist", "lloyd_reduce", "fused_assign_reduce",
-               "remove_below", "update_min_dist"}
+               "remove_below", "update_min_dist", "sensitivity_scores"}
     assert public == set(ops.ENTRY_POINTS) == covered

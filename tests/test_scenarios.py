@@ -17,7 +17,8 @@ from repro.scenarios import (Condition, Scenario, ScenarioData,
 
 REQUIRED = {"zipf_gaussian", "adversarial_kmeanspar", "heavy_tailed",
             "outlier_contaminated", "imbalanced_shards", "noniid_shards",
-            "faulty_cluster", "bf16_uplink"}
+            "faulty_cluster", "bf16_uplink", "coreset_budget",
+            "int8_coreset"}
 
 
 # ------------------------------------------------------------- registry
@@ -171,6 +172,32 @@ def test_bf16_condition_halves_uplink_bytes(sweep_rows):
                                          fp32["baseline_cost"]), algo
 
 
+def test_coreset_scenarios_pinned_algos():
+    """The coreset scenarios pin their algorithm lists, so the sweep
+    emits coreset_kmeans rows even though it is not a sweep default."""
+    assert get_scenario("coreset_budget").algos == (
+        "soccer", "kmeans_parallel", "coreset_kmeans")
+    assert get_scenario("int8_coreset").algos == (
+        "soccer", "coreset_kmeans")
+    # and a scenario without a pinned list keeps following the sweep's
+    assert get_scenario("zipf_gaussian").algos is None
+
+
+@pytest.mark.slow
+def test_coreset_budget_scenario_compresses_uplink():
+    """The acceptance row: SOCCER's coreset-compressed condition uploads
+    strictly fewer bytes than its uncompressed baseline at comparable
+    cost, and coreset_kmeans finishes in one round."""
+    rows = run_scenario(get_scenario("coreset_budget"), quick=True, seed=0)
+    by = {(r["algo"], r["condition"]): r for r in rows if not r["skipped"]}
+    ck = by[("coreset_kmeans", "baseline")]
+    assert ck["rounds"] == 1
+    base = by[("soccer", "baseline")]
+    comp = by[("soccer", "coreset_uplink")]
+    assert comp["uplink_bytes"] < base["uplink_bytes"]
+    assert comp["cost"] <= 1.5 * max(base["cost"], base["baseline_cost"])
+
+
 def test_condition_restriction_reports_skipped():
     rows = run_scenario(get_scenario("faulty_cluster"),
                         algos=("kmeans_parallel",), quick=True, seed=0)
@@ -188,11 +215,15 @@ def test_fit_uplink_dtype_accounting():
                 epsilon=0.2)
     res16 = fit(x, 4, algo="soccer", backend="virtual", m=4, seed=0,
                 epsilon=0.2, uplink_dtype="bfloat16")
+    res8 = fit(x, 4, algo="soccer", backend="virtual", m=4, seed=0,
+               epsilon=0.2, uplink_dtype="int8")
     assert np.array_equal(res32.uplink_bytes, res32.uplink_points * 6 * 4)
     assert np.array_equal(res16.uplink_bytes, res16.uplink_points * 6 * 2)
+    assert np.array_equal(res8.uplink_bytes, res8.uplink_points * 6 * 1)
     assert res16.params["uplink_dtype"] == "bfloat16"
+    assert res8.params["uplink_dtype"] == "int8"
     with pytest.raises(ValueError, match="uplink_dtype"):
-        fit(x, 4, algo="soccer", m=4, uplink_dtype="int8")
+        fit(x, 4, algo="soccer", m=4, uplink_dtype="int4")
 
 
 def test_fit_shard_policy_validation():

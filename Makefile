@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all test-kernels smoke bench-kernels bench scenarios lint
+.PHONY: test test-all test-kernels smoke bench-kernels bench scenarios lint autotune
 
 smoke:           ## quickstart example + one fit() per registered algorithm
 	$(PYTHON) examples/quickstart.py
@@ -23,6 +23,9 @@ bench-kernels:   ## kernel micro-bench + roofline smoke (quick shapes)
 
 bench:           ## all paper-table benchmarks at full CPU-feasible sizes
 	$(PYTHON) -m benchmarks.run
+
+autotune:        ## measure best kernel block sizes on THIS hardware
+	$(PYTHON) -m repro.kernels.autotune --quick
 
 scenarios:       ## quick paper-suite scenario sweep -> BENCH_scenarios.json
 	$(PYTHON) -m repro.scenarios.run --suite paper --quick

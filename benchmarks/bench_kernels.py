@@ -6,10 +6,20 @@ vehicle, not a performance one). For the TPU target we report each
 kernel's analytic roofline from its block structure: flops, HBM bytes,
 arithmetic intensity, and the projected v5e-bound time.
 
-The analytic models also record the tentpole claim of the fused-kernel
+Every row also carries a MEASURED ``roofline_fraction``: the kernel's
+best-case time on the peaks this device actually sustains
+(``hw.measured_peaks()`` microbenchmarks matmul throughput + memory
+bandwidth once per process) divided by the measured wall time. On TPU
+the target is > 0.8; the nightly gate (benchmarks/check_regression.py)
+fails CI when any row's fraction regresses > 20% vs the committed
+results/kernels.json.
+
+The analytic models also record the tentpole claims of the fused-kernel
 layer: one fused assign+reduce sweep moves roughly half the HBM bytes of
-the min_dist + lloyd_reduce pair it replaces (see the ``fused_vs_unfused``
-block in benchmarks/results/kernels.json).
+the min_dist + lloyd_reduce pair it replaces (``fused_vs_unfused``), and
+the chunked-K fused kernel makes exactly ONE grid walk over ``x``
+(asserted in ``analytic`` — the byte model's x-traffic term is a single
+read since the single-walk rewrite).
 """
 from __future__ import annotations
 
@@ -72,16 +82,20 @@ def analytic(kernel: str, n: int, k: int, d: int):
         flops = 2.0 * n * k * d + 2.0 * n * k
         bytes_hbm = 4.0 * (n * d + 3 * n + k * d + k + 1)
     elif kernel == "fused_assign_reduce_chunked":
-        # phase A streams x once (resident across center chunks, running
-        # min in VMEM scratch) but re-fetches each center chunk per point
-        # panel; phase B re-reads x/w/assign per center chunk for the
-        # resident-accumulator scatter
+        # SINGLE grid walk since the one-walk rewrite: x is read once
+        # (each point panel resident across center chunks, running
+        # (min, argmin) in VMEM scratch), center chunks + validity are
+        # re-fetched per point panel, the (kp, d) + (kp,) accumulators
+        # stay VMEM-resident for the whole walk, and the (n,) assignment
+        # never exists in HBM. The old two-walk model had an extra
+        # nc-fold re-stream of x for the scatter phase.
         bn, bk = chunk_sizes(d)
-        nc = -(-k // bk)
         np_ = -(-n // bn)
+        x_hbm_reads = 1                  # the one-walk contract; asserted
+        assert x_hbm_reads == 1, "chunked fused kernel must read x once"
         flops = 4.0 * n * k * d
-        bytes_hbm = 4.0 * (n * d * (1 + nc) + n * (1 + 2 * nc)
-                           + np_ * k * d + k * d + k + 1)
+        bytes_hbm = 4.0 * (x_hbm_reads * n * d + n
+                           + np_ * (k * d + k) + k * d + k + 1)
     elif kernel == "remove_below_chunked":
         # one x sweep (running min in VMEM scratch, never spilled);
         # centers re-fetched per point panel
@@ -97,8 +111,15 @@ def analytic(kernel: str, n: int, k: int, d: int):
 
 def _row(kernel, n, k, d, wall_s, n_meas):
     flops, byts, t_tpu, bound = analytic(kernel, n, k, d)
+    peaks = hw.measured_peaks()
+    # measured roofline: the kernel's best-case time on the peaks THIS
+    # device sustains (matmul + copy microbenchmarks), over the measured
+    # wall time — achieved fraction of realizable hardware speed. The
+    # wall-clock extrapolation factor cancels (both scale with n/n_meas).
+    frac = peaks.roofline_s(flops, byts) / max(wall_s, 1e-12)
     emit(f"kernel/{kernel}/{n}x{k}x{d}", wall_s * 1e6,
          gflops_cpu=f"{flops/wall_s/1e9:.1f}",
+         roofline_fraction=f"{frac:.3f}",
          tpu_bound=bound, tpu_roofline_us=f"{t_tpu*1e6:.1f}")
     # n_meas < n marks cpu_wall_s as linearly extrapolated from a --quick
     # run — don't compare against full-run timings without checking it
@@ -106,6 +127,9 @@ def _row(kernel, n, k, d, wall_s, n_meas):
             "cpu_wall_s": wall_s, "n_meas": n_meas,
             "extrapolated": n_meas < n,
             "flops": flops, "hbm_bytes": byts,
+            "roofline_fraction": frac,
+            "measured_peak_flops": peaks.flops,
+            "measured_mem_bw": peaks.mem_bw,
             "tpu_bound": bound, "tpu_roofline_s": t_tpu,
             "intensity_flops_per_byte": flops / byts}
 
@@ -121,6 +145,27 @@ def fused_vs_unfused(n, k, d):
             "hbm_bytes_ratio": fu_b / unfused_b,
             "unfused_roofline_s": unfused_t, "fused_roofline_s": fu_t,
             "roofline_speedup": unfused_t / fu_t}
+
+
+def chunked_one_walk_vs_two(n, k, d):
+    """HBM-traffic claim of the single-walk chunked rewrite: the old
+    implementation's second grid walk (scatter phase) re-streamed x once
+    per center chunk; the new kernel reads x exactly once."""
+    bn, bk = chunk_sizes(d)
+    nc = -(-k // bk)
+    np_ = -(-n // bn)
+    flops = 4.0 * n * k * d
+    two_walk_b = 4.0 * (n * d * (1 + nc) + n * (1 + 2 * nc)
+                        + np_ * k * d + k * d + k + 1)
+    _, one_walk_b, one_t, _ = analytic("fused_assign_reduce_chunked",
+                                       n, k, d)
+    two_t, _ = _roofline(flops, two_walk_b)
+    return {"n": n, "k": k, "d": d,
+            "two_walk_hbm_bytes": two_walk_b,
+            "one_walk_hbm_bytes": one_walk_b,
+            "hbm_bytes_ratio": one_walk_b / two_walk_b,
+            "two_walk_roofline_s": two_t, "one_walk_roofline_s": one_t,
+            "roofline_speedup": two_t / one_t}
 
 
 def seeding_fused_vs_unfused(n, d):
@@ -192,6 +237,7 @@ def run(quick: bool = False):
     # times the XLA oracle path (on CPU `auto` resolves to ref — see the
     # module docstring); the analytic columns model the chunked-K Pallas
     # kernels these shapes dispatch to on TPU.
+    chunk_cmps = []
     for n, k, d in CHUNKED_SHAPES:
         n_meas = min(n, QUICK_N) if quick else n
         rng = np.random.default_rng(1)
@@ -208,6 +254,13 @@ def run(quick: bool = False):
         t, _ = timed(lambda: ops.remove_below(xm, c, alive, v))
         rows.append(_row("remove_below_chunked", n, k, d,
                          t * n / n_meas, n_meas))
+
+        ccmp = chunked_one_walk_vs_two(n, k, d)
+        chunk_cmps.append(ccmp)
+        emit(f"kernel/chunked_one_walk_vs_two/{n}x{k}x{d}",
+             ccmp["one_walk_roofline_s"] * 1e6,
+             hbm_bytes_ratio=f"{ccmp['hbm_bytes_ratio']:.3f}",
+             roofline_speedup=f"{ccmp['roofline_speedup']:.2f}x")
 
     # Coreset construction sweep: end-to-end per-machine build_coreset
     # (k-means++ bicriteria + sensitivity sweep + importance draw) as a
@@ -237,6 +290,7 @@ def run(quick: bool = False):
 
     save_json("kernels", {"rows": rows, "fused_vs_unfused": comparisons,
                           "seeding_fused_vs_unfused": seeding_cmps,
+                          "chunked_one_walk_vs_two": chunk_cmps,
                           "coreset_build": coreset_rows})
     return rows
 

@@ -1,0 +1,75 @@
+"""Nightly roofline-regression gate (bench.yml).
+
+Compares a freshly produced ``results/kernels.json`` against a committed
+baseline and FAILS (exit 1) when any kernel row's measured
+``roofline_fraction`` dropped by more than ``--threshold`` (default 20%):
+the achieved fraction of this device's realizable peaks falling that far
+means a kernel, the tuner, or the dispatch regressed — the fraction is
+hardware-normalized, so the gate survives runner-speed drift far better
+than raw wall time would.
+
+Rows are matched on (kernel, n, k, d); rows present on only one side are
+reported but do not fail the gate (shape sets may evolve). Baseline rows
+without a fraction (pre-autotune schema) are skipped.
+
+Usage:
+    python -m benchmarks.check_regression --current results/kernels.json \
+        --baseline <committed kernels.json> [--threshold 0.20]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+DEFAULT_THRESHOLD = 0.20
+
+
+def _rows(path: pathlib.Path) -> dict:
+    payload = json.loads(path.read_text())
+    return {(r["kernel"], r["n"], r.get("k"), r["d"]): r
+            for r in payload.get("rows", [])}
+
+
+def check(current: pathlib.Path, baseline: pathlib.Path,
+          threshold: float = DEFAULT_THRESHOLD) -> int:
+    cur, base = _rows(current), _rows(baseline)
+    failures = []
+    for key, b in sorted(base.items(), key=str):
+        c = cur.get(key)
+        bf, cf = b.get("roofline_fraction"), (c or {}).get(
+            "roofline_fraction")
+        if c is None or bf is None:
+            print(f"skip {key}: "
+                  f"{'missing in current' if c is None else 'no baseline fraction'}")
+            continue
+        drop = (bf - cf) / bf if bf > 0 else 0.0
+        status = "FAIL" if drop > threshold else "ok"
+        print(f"{status} {key}: roofline_fraction {bf:.3f} -> {cf:.3f} "
+              f"({-drop:+.1%})")
+        if drop > threshold:
+            failures.append(key)
+    for key in sorted(set(cur) - set(base), key=str):
+        print(f"new  {key}: roofline_fraction "
+              f"{cur[key].get('roofline_fraction', float('nan')):.3f}")
+    if failures:
+        print(f"\n{len(failures)} row(s) regressed roofline_fraction by "
+              f"more than {threshold:.0%}")
+        return 1
+    print("\nno roofline_fraction regressions")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when kernel roofline_fraction regresses")
+    ap.add_argument("--current", required=True, type=pathlib.Path)
+    ap.add_argument("--baseline", required=True, type=pathlib.Path)
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
+    args = ap.parse_args(argv)
+    return check(args.current, args.baseline, args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

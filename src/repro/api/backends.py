@@ -91,8 +91,15 @@ class Backend(Protocol):
     def put(self, tree: Any, marks: Any) -> Any:
         """Place a pytree according to its marks (device_put on a mesh)."""
 
-    def compile(self, fn, in_marks: Tuple, out_marks: Any):
-        """Compile ``fn(*args)``; marks mirror the args/result pytrees."""
+    def compile(self, fn, in_marks: Tuple, out_marks: Any,
+                donate: Tuple[int, ...] = ()):
+        """Compile ``fn(*args)``; marks mirror the args/result pytrees.
+
+        ``donate`` lists argument positions whose buffers the caller
+        hands over (jit ``donate_argnums``) — drivers donate the center
+        buffers they thread through multi-round scans so each round
+        updates in place instead of allocating a fresh (rows, d) block.
+        """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,9 +115,9 @@ class VirtualBackend:
         del marks
         return tree
 
-    def compile(self, fn, in_marks, out_marks):
+    def compile(self, fn, in_marks, out_marks, donate=()):
         del in_marks, out_marks
-        return jax.jit(fn)
+        return jax.jit(fn, donate_argnums=donate)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,9 +138,9 @@ class CommBackend:
         del marks
         return tree
 
-    def compile(self, fn, in_marks, out_marks):
+    def compile(self, fn, in_marks, out_marks, donate=()):
         del in_marks, out_marks
-        return jax.jit(fn)
+        return jax.jit(fn, donate_argnums=donate)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,10 +175,10 @@ class MeshBackend:
                 leaf, NamedSharding(self.mesh, self._spec(mk))),
             tree, marks)
 
-    def compile(self, fn, in_marks, out_marks):
+    def compile(self, fn, in_marks, out_marks, donate=()):
         mapped = _shard_map(fn, self.mesh, in_specs=self._specs(in_marks),
                             out_specs=self._specs(out_marks))
-        return jax.jit(mapped)
+        return jax.jit(mapped, donate_argnums=donate)
 
 
 def resolve_backend(backend, m: int, uplink_dtype=None) -> Backend:

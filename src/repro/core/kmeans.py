@@ -8,6 +8,7 @@ padding and never selected; empty clusters keep their previous center.
 """
 from __future__ import annotations
 
+import collections
 import functools
 from typing import Optional, Tuple
 
@@ -16,6 +17,12 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.kernels import ops
+
+# Times each traced body below was traced (NOT called): the regression
+# tests assert the seeding step traces a constant number of times
+# regardless of k — i.e. the lax.scan conversion holds and seeding
+# compiles once instead of once per center (or per round).
+TRACE_COUNTS = collections.Counter()
 
 
 def _categorical(key: jax.Array, p: jax.Array) -> jax.Array:
@@ -41,6 +48,7 @@ def kmeans_plusplus(key: jax.Array, x: jax.Array, w: jax.Array,
     first = x[_categorical(k0, w)].astype(jnp.float32)
 
     def step(carry, kk):
+        TRACE_COUNTS["kmeans_plusplus_step"] += 1
         d2min, centers, i = carry
         c_new = centers[i - 1]
         d2min, mass = ops.update_min_dist(x, w, c_new[None, :], d2min)

@@ -21,6 +21,7 @@ centers/thresholds up to reduction order.
 """
 from __future__ import annotations
 
+import collections
 import math
 from typing import Tuple
 
@@ -32,6 +33,10 @@ from repro.core.sampling import (apportion, global_weighted_choice,
                                  sample_local)
 from repro.core.truncated_cost import weighted_top_mass
 from repro.kernels import ops
+
+# Traces (not calls) of the scanned seeding step — regression-tested to
+# stay constant in k (see core.kmeans.TRACE_COUNTS).
+TRACE_COUNTS = collections.Counter()
 
 
 def draw_local_sample(comm, key, x, w, alive, n_vec_resp, total: int,
@@ -69,6 +74,7 @@ def distributed_kmeans_pp(key, comm, pts, ws, k: int) -> jax.Array:
     first = global_weighted_choice(k0, comm, ws, pts)
 
     def step(carry, kk):
+        TRACE_COUNTS["distributed_kmeans_pp_step"] += 1
         d2min, centers, i = carry
         c_new = centers[i - 1]
         d2min, local_mass = jax.vmap(

@@ -5,15 +5,19 @@ twice: a Lloyd step ran ``min_dist`` then ``lloyd_reduce`` as separate
 sweeps, and the per-round removal pass materialized the full per-machine
 distance array before masking and re-reducing counts. For small k (the
 common regime: k_plus a few hundred, d <= a few hundred) both kernels are
-memory-bound, so halving HBM traffic halves the step time. The two fused
-kernels here each make exactly one grid walk over point panels with the
-whole (padded) center set resident in VMEM:
+memory-bound, so halving HBM traffic halves the step time. The fused
+kernels here each make exactly ONE grid walk over point panels:
 
 * ``fused_assign_reduce``: per panel, drive ``-2 x @ c^T`` through the MXU,
   take the masked (min, argmin), build the weighted one-hot in VMEM, and
   accumulate per-center ``(sums, counts)`` plus the weighted cost — one HBM
   read of ``x`` per Lloyd iteration instead of two, and the (n,) assignment
   vector never round-trips through HBM.
+* ``fused_assign_reduce_pipelined``: the same math with the point/weight
+  stream driven by *explicit double-buffered HBM->VMEM DMA* (two panel
+  slots, the next panel's copy in flight while the current one computes)
+  instead of BlockSpec streaming — the big-n variant ops.py dispatches to
+  when the walk spans multiple panels.
 * ``remove_below``: per (machine, panel), compute ``min_j rho(x, C)^2``,
   compare against the broadcast threshold ``v``, AND into the ``alive``
   mask, and accumulate per-machine live counts — the (m, p) distance array
@@ -22,20 +26,27 @@ whole (padded) center set resident in VMEM:
   the running min-d2 against the newly chosen center(s) AND totals the
   weighted sampling mass for the next categorical draw — fused here into
   one sweep of ``x`` instead of a distance pass plus three (n,) passes.
-* ``*_chunked``: big-k variants of the two fused kernels above for
-  EIM11-sized center sets that do not fit VMEM. The center set is tiled
-  through VMEM in ``tuning.chunk_sizes`` panels with a running
-  (min, argmin) per point panel (the ``min_dist`` grid structure);
-  the assign-reduce version runs a second scatter pass over point panels
-  with the center-chunk axis outermost so each (k_chunk, d) accumulator
-  stays resident while every panel streams by.
+  ``update_min_dist_pipelined`` double-buffers the input stream AND the
+  (n,) output stream (per-panel VMEM->HBM write-back DMA).
+* ``*_chunked``: big-k variants for EIM11-sized center sets that do not
+  fit VMEM. The center set is tiled through VMEM in ``tuning.chunk_sizes``
+  panels with a running (min, argmin) per point panel; the assign-reduce
+  variant is a SINGLE grid walk — the (kp, d) + (kp,) accumulators stay
+  resident in VMEM for the whole walk and the weighted one-hot scatter
+  runs chunk-by-chunk once each point panel's argmin is final, so ``x``
+  is read from HBM exactly once (the old second scatter walk is gone;
+  it survives only as a fallback for accumulator sets beyond
+  ``_CHUNK_ACC_BUDGET``).
 
 All kernels accept float32, bfloat16 or float16 points/centers (every
 ``UPLINK_DTYPES`` precision) and accumulate in float32 (inputs are
 widened on load from VMEM, never in HBM), so reduced-precision uplink
 payloads are clustered without an upcast materializing 2x the bytes.
 
-Block sizes come from the shared autotune table in ``kernels.tuning``.
+Block sizes come from ``kernels.tuning`` (measured table first, analytic
+fallback); every wrapper also takes explicit static size overrides
+(``bn=``, ``k_chunk=``) — the hook ``kernels.autotune`` uses to time
+candidates past the jit cache.
 """
 from __future__ import annotations
 
@@ -51,6 +62,11 @@ from repro.kernels.tuning import block_sizes, chunk_sizes, clamp_bn
 
 _BIG = 3.0e38  # plain float so the kernels capture no traced constants
 
+# The single-walk chunked kernel keeps the full (kp, d) + (kp,)
+# accumulators resident in VMEM; center sets whose accumulators exceed
+# this fall back to the legacy two-walk scatter variant.
+_CHUNK_ACC_BUDGET = 6 * 2**20
+
 
 def _panel_min(x, c, cv):
     """(bn,) masked min squared distance + argmin against resident centers."""
@@ -61,6 +77,18 @@ def _panel_min(x, c, cv):
     d2 = x2 - 2.0 * dots + c2                       # (bn, kp)
     d2 = jnp.where(cv[None, :] != 0, d2, _BIG)
     return jnp.maximum(jnp.min(d2, axis=1), 0.0), jnp.argmin(d2, axis=1)
+
+
+def _assign_reduce_panel(x, w, c, cv, kp):
+    """One panel's fused contribution: ((kp, d) sums, (kp,) cnt, () cost)."""
+    dmin, a = _panel_min(x, c, cv)
+    centers = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], kp), 1)
+    onehot = (a.astype(jnp.int32)[:, None] == centers
+              ).astype(jnp.float32) * w[:, None]    # (bn, kp)
+    sums = jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (kp, d)
+    return sums, jnp.sum(onehot, axis=0), jnp.sum(w * dmin)
 
 
 def _fused_kernel(x_ref, w_ref, c_ref, cv_ref,
@@ -76,41 +104,47 @@ def _fused_kernel(x_ref, w_ref, c_ref, cv_ref,
     x = x_ref[...].astype(jnp.float32)              # (bn, d)
     w = w_ref[...].astype(jnp.float32)              # (bn,)
     c = c_ref[...].astype(jnp.float32)              # (kp, d)
-    dmin, a = _panel_min(x, c, cv_ref[...])
-
-    centers = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], kp), 1)
-    onehot = (a.astype(jnp.int32)[:, None] == centers
-              ).astype(jnp.float32) * w[:, None]    # (bn, kp)
-
-    sums_ref[...] += jax.lax.dot_general(
-        onehot, x, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)          # (kp, d)
-    cnt_ref[...] += jnp.sum(onehot, axis=0)
-    cost_ref[0, 0] += jnp.sum(w * dmin)
+    sums, cnt, cost = _assign_reduce_panel(x, w, c, cv_ref[...], kp)
+    sums_ref[...] += sums
+    cnt_ref[...] += cnt
+    cost_ref[0, 0] += cost
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _resident_bn(d: int, k: int, n: int, dtype, bn: Optional[int]) -> int:
+    """Point-panel size for the resident-center kernels: the tuned (d, k)
+    entry unless overridden, shrunk so the (bn, kp) one-hot panel stays
+    inside the VMEM budget, then clamped toward n."""
+    if bn is None:
+        bn, _ = block_sizes(d, k, str(dtype))
+        if -(-k // 128) * 128 >= 512:   # keep the (bn, kp) one-hot panel
+            bn = min(bn, 256)           # inside the VMEM budget
+    return clamp_bn(bn, n)
+
+
+def _pad_points(x, w, c, c_valid, bn):
+    n, _ = x.shape
+    k = c.shape[0]
+    cv = (jnp.ones((k,), jnp.int8) if c_valid is None
+          else c_valid.astype(jnp.int8))
+    kp = -(-k // 128) * 128
+    xp = jnp.pad(x, ((0, -n % bn), (0, 0)))
+    wp = jnp.pad(w, (0, -n % bn))                    # weight-0 rows are no-ops
+    cp = jnp.pad(c, ((0, kp - k), (0, 0)))
+    cvp = jnp.pad(cv, (0, kp - k))                   # padded centers invalid
+    return xp, wp, cp, cvp, kp
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bn"))
 def fused_assign_reduce_pallas(x: jax.Array, w: jax.Array, c: jax.Array,
                                c_valid: Optional[jax.Array] = None,
-                               *, interpret: bool = False
+                               *, interpret: bool = False,
+                               bn: Optional[int] = None
                                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-sweep Lloyd step: ((k, d) sums, (k,) counts, () weighted cost)."""
     n, d = x.shape
     k = c.shape[0]
-    if c_valid is None:
-        c_valid = jnp.ones((k,), jnp.int8)
-    else:
-        c_valid = c_valid.astype(jnp.int8)
-
-    bn, _ = block_sizes(d, k)
-    kp = -(-k // 128) * 128                          # centers stay resident
-    if kp >= 512:                                    # keep the (bn, kp) one-hot
-        bn = min(bn, 256)                            # inside the VMEM budget
-    bn = clamp_bn(bn, n)
-    xp = jnp.pad(x, ((0, -n % bn), (0, 0)))
-    wp = jnp.pad(w, (0, -n % bn))                    # weight-0 rows are no-ops
-    cp = jnp.pad(c, ((0, kp - k), (0, 0)))
-    cvp = jnp.pad(c_valid, (0, kp - k))              # padded centers invalid
+    bn = _resident_bn(d, k, n, x.dtype, bn)
+    xp, wp, cp, cvp, kp = _pad_points(x, w, c, c_valid, bn)
 
     grid = (xp.shape[0] // bn,)
     sums, counts, cost = pl.pallas_call(
@@ -137,6 +171,96 @@ def fused_assign_reduce_pallas(x: jax.Array, w: jax.Array, c: jax.Array,
     return sums[:k], counts[:k], cost[0, 0]
 
 
+def _fused_pipelined_kernel(x_hbm, w_hbm, c_ref, cv_ref,
+                            sums_ref, cnt_ref, cost_ref,
+                            xs, ws, xsem, wsem, *, bn: int, kp: int,
+                            nsteps: int):
+    """Single-program grid walk with explicit double-buffered input DMA:
+    panel i+1's HBM->VMEM copies start before panel i's compute."""
+    sums_ref[...] = jnp.zeros(sums_ref.shape, jnp.float32)
+    cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.float32)
+    cost_ref[...] = jnp.zeros(cost_ref.shape, jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    cv = cv_ref[...]
+
+    def x_dma(slot, i):
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(i * bn, bn)], xs.at[slot], xsem.at[slot])
+
+    def w_dma(slot, i):
+        return pltpu.make_async_copy(
+            w_hbm.at[pl.ds(i * bn, bn)], ws.at[slot], wsem.at[slot])
+
+    x_dma(0, 0).start()
+    w_dma(0, 0).start()
+
+    def body(i, _):
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        @pl.when(i + 1 < nsteps)
+        def _prefetch():
+            x_dma(nxt, i + 1).start()
+            w_dma(nxt, i + 1).start()
+
+        x_dma(slot, i).wait()
+        w_dma(slot, i).wait()
+        x = xs[slot].astype(jnp.float32)
+        w = ws[slot].astype(jnp.float32)
+        sums, cnt, cost = _assign_reduce_panel(x, w, c, cv, kp)
+        sums_ref[...] += sums
+        cnt_ref[...] += cnt
+        cost_ref[0, 0] += cost
+        return 0
+
+    jax.lax.fori_loop(0, nsteps, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bn"))
+def fused_assign_reduce_pipelined_pallas(
+        x: jax.Array, w: jax.Array, c: jax.Array,
+        c_valid: Optional[jax.Array] = None,
+        *, interpret: bool = False, bn: Optional[int] = None
+        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``fused_assign_reduce`` with manual double-buffered HBM->VMEM DMA
+    over the point/weight stream (same contract, same accumulators)."""
+    n, d = x.shape
+    k = c.shape[0]
+    bn = _resident_bn(d, k, n, x.dtype, bn)
+    xp, wp, cp, cvp, kp = _pad_points(x, w.astype(jnp.float32), c,
+                                      c_valid, bn)
+    nsteps = xp.shape[0] // bn
+
+    sums, counts, cost = pl.pallas_call(
+        functools.partial(_fused_pipelined_kernel, bn=bn, kp=kp,
+                          nsteps=nsteps),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),    # x stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),    # w stays in HBM
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kp, d), jnp.float32),
+            jax.ShapeDtypeStruct((kp,), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, bn, d), xp.dtype),        # double-buffered x
+            pltpu.VMEM((2, bn), jnp.float32),        # double-buffered w
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(xp, wp, cp, cvp)
+    return sums[:k], counts[:k], cost[0, 0]
+
+
 def _remove_kernel(x_ref, a_ref, c_ref, cv_ref, v_ref, out_ref, live_ref):
     j = pl.program_id(1)
 
@@ -151,11 +275,12 @@ def _remove_kernel(x_ref, a_ref, c_ref, cv_ref, v_ref, out_ref, live_ref):
     live_ref[0] += jnp.sum(keep.astype(jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "bn"))
 def remove_below_pallas(x: jax.Array, c: jax.Array, alive: jax.Array,
                         v: jax.Array,
                         c_valid: Optional[jax.Array] = None,
-                        *, interpret: bool = False
+                        *, interpret: bool = False,
+                        bn: Optional[int] = None
                         ) -> Tuple[jax.Array, jax.Array]:
     """Fused SOCCER removal over (m, p, d) machine-sharded points.
 
@@ -168,11 +293,8 @@ def remove_below_pallas(x: jax.Array, c: jax.Array, alive: jax.Array,
     else:
         c_valid = c_valid.astype(jnp.int8)
 
-    bn, _ = block_sizes(d, k)
+    bn = _resident_bn(d, k, p, x.dtype, bn)
     kp = -(-k // 128) * 128
-    if kp >= 512:
-        bn = min(bn, 256)
-    bn = clamp_bn(bn, p)
     xp = jnp.pad(x, ((0, 0), (0, -p % bn), (0, 0)))
     ap = jnp.pad(alive.astype(jnp.int8), ((0, 0), (0, -p % bn)))  # pad = dead
     cp = jnp.pad(c, ((0, kp - k), (0, 0)))
@@ -226,11 +348,12 @@ def _update_kernel(x_ref, w_ref, d2_ref, c_ref, cv_ref,
     mass_ref[0, 0] += jnp.sum(w * new)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "bn"))
 def update_min_dist_pallas(x: jax.Array, w: jax.Array, c: jax.Array,
                            d2: jax.Array,
                            c_valid: Optional[jax.Array] = None,
-                           *, interpret: bool = False
+                           *, interpret: bool = False,
+                           bn: Optional[int] = None
                            ) -> Tuple[jax.Array, jax.Array]:
     """Fused D²-seeding update: ((n,) new min-d2, () weighted mass).
 
@@ -239,21 +362,9 @@ def update_min_dist_pallas(x: jax.Array, w: jax.Array, c: jax.Array,
     """
     n, d = x.shape
     kc = c.shape[0]
-    if c_valid is None:
-        c_valid = jnp.ones((kc,), jnp.int8)
-    else:
-        c_valid = c_valid.astype(jnp.int8)
-
-    bn, _ = block_sizes(d, kc)
-    kp = -(-kc // 128) * 128                         # new centers resident
-    if kp >= 512:
-        bn = min(bn, 256)
-    bn = clamp_bn(bn, n)
-    xp = jnp.pad(x, ((0, -n % bn), (0, 0)))
-    wp = jnp.pad(w, (0, -n % bn))                    # weight-0 rows: no mass
+    bn = _resident_bn(d, kc, n, x.dtype, bn)
     dp = jnp.pad(d2.astype(jnp.float32), (0, -n % bn))  # pad 0, not inf:
-    cp = jnp.pad(c, ((0, kp - kc), (0, 0)))             # 0 * w_pad stays 0
-    cvp = jnp.pad(c_valid, (0, kp - kc))
+    xp, wp, cp, cvp, kp = _pad_points(x, w, c, c_valid, bn)  # 0*w_pad = 0
 
     grid = (xp.shape[0] // bn,)
     out, mass = pl.pallas_call(
@@ -277,6 +388,232 @@ def update_min_dist_pallas(x: jax.Array, w: jax.Array, c: jax.Array,
         interpret=interpret,
     )(xp, wp, dp, cp, cvp)
     return out[:n], mass[0, 0]
+
+
+def _update_pipelined_kernel(x_hbm, w_hbm, d2_hbm, c_ref, cv_ref,
+                             out_hbm, mass_ref,
+                             xs, ws, ds, outs, xsem, wsem, dsem, osem,
+                             *, bn: int, nsteps: int):
+    """Double-buffered D²-seeding walk: inputs stream in over two DMA
+    slots and the updated (bn,) min-d2 panels stream back out VMEM->HBM,
+    also double-buffered (a slot is reused only after its previous
+    write-back completed)."""
+    mass_ref[...] = jnp.zeros(mass_ref.shape, jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    cv = cv_ref[...]
+    any_valid = jnp.any(cv != 0)
+
+    def in_dma(slot, i):
+        return (pltpu.make_async_copy(x_hbm.at[pl.ds(i * bn, bn)],
+                                      xs.at[slot], xsem.at[slot]),
+                pltpu.make_async_copy(w_hbm.at[pl.ds(i * bn, bn)],
+                                     ws.at[slot], wsem.at[slot]),
+                pltpu.make_async_copy(d2_hbm.at[pl.ds(i * bn, bn)],
+                                      ds.at[slot], dsem.at[slot]))
+
+    def out_dma(slot, i):
+        return pltpu.make_async_copy(
+            outs.at[slot], out_hbm.at[pl.ds(i * bn, bn)], osem.at[slot])
+
+    for dma in in_dma(0, 0):
+        dma.start()
+
+    def body(i, _):
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        @pl.when(i + 1 < nsteps)
+        def _prefetch():
+            for dma in in_dma(nxt, i + 1):
+                dma.start()
+
+        for dma in in_dma(slot, i):
+            dma.wait()
+        x = xs[slot].astype(jnp.float32)
+        w = ws[slot].astype(jnp.float32)
+        prev = ds[slot]
+        cand, _ = _panel_min(x, c, cv)
+        new = jnp.where(any_valid, jnp.minimum(prev, cand), prev)
+
+        @pl.when(i >= 2)                     # slot reused: write-back of
+        def _drain():                        # panel i-2 must be done
+            out_dma(slot, i - 2).wait()
+
+        outs[slot] = new
+        out_dma(slot, i).start()
+        mass_ref[0, 0] += jnp.sum(w * new)
+        return 0
+
+    jax.lax.fori_loop(0, nsteps, body, 0)
+    for t in range(max(0, nsteps - 2), nsteps):  # static epilogue drain
+        out_dma(t % 2, t).wait()
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bn"))
+def update_min_dist_pipelined_pallas(
+        x: jax.Array, w: jax.Array, c: jax.Array, d2: jax.Array,
+        c_valid: Optional[jax.Array] = None,
+        *, interpret: bool = False, bn: Optional[int] = None
+        ) -> Tuple[jax.Array, jax.Array]:
+    """``update_min_dist`` with double-buffered input AND output DMA."""
+    n, d = x.shape
+    kc = c.shape[0]
+    bn = _resident_bn(d, kc, n, x.dtype, bn)
+    dp = jnp.pad(d2.astype(jnp.float32), (0, -n % bn))
+    xp, wp, cp, cvp, kp = _pad_points(x, w.astype(jnp.float32), c,
+                                      c_valid, bn)
+    nsteps = xp.shape[0] // bn
+
+    out, mass = pl.pallas_call(
+        functools.partial(_update_pipelined_kernel, bn=bn, nsteps=nsteps),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),    # streamed back by DMA
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, bn, d), xp.dtype),
+            pltpu.VMEM((2, bn), jnp.float32),
+            pltpu.VMEM((2, bn), jnp.float32),
+            pltpu.VMEM((2, bn), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(xp, wp, dp, cp, cvp)
+    return out[:n], mass[0, 0]
+
+
+def _fused_chunked_kernel(x_ref, w_ref, c_ref, cv_ref,
+                          sums_ref, cnt_ref, cost_ref, d2_scr, idx_scr,
+                          *, bk: int, nc: int):
+    """Single-walk chunked-K fused step. Grid (point panel, center chunk)
+    with the chunk axis innermost: the running (min, argmin) lives in
+    VMEM scratch while x stays resident across chunks, and once the last
+    chunk finalizes a panel's argmin the weighted one-hot scatter runs
+    chunk-by-chunk into the walk-resident (kp, d) accumulators."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_walk():
+        sums_ref[...] = jnp.zeros(sums_ref.shape, jnp.float32)
+        cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.float32)
+        cost_ref[...] = jnp.zeros(cost_ref.shape, jnp.float32)
+
+    @pl.when(j == 0)
+    def _init_panel():
+        d2_scr[...] = jnp.full(d2_scr.shape, _BIG, jnp.float32)
+        idx_scr[...] = jnp.zeros(idx_scr.shape, jnp.int32)
+
+    x = x_ref[...].astype(jnp.float32)              # (bn, d) resident over j
+    local_min, local_arg = _panel_min(x, c_ref[...].astype(jnp.float32),
+                                      cv_ref[...])
+    local_arg = local_arg.astype(jnp.int32) + j * bk
+
+    prev = d2_scr[...]
+    better = local_min < prev
+    idx_scr[...] = jnp.where(better, local_arg, idx_scr[...])
+    d2_scr[...] = jnp.where(better, local_min, prev)
+
+    @pl.when(j == nc - 1)
+    def _scatter():                                 # argmin now final
+        w = w_ref[...].astype(jnp.float32)
+        a = idx_scr[...]
+        centers = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], bk), 1)
+        for jj in range(nc):                        # static chunk unroll
+            onehot = ((a - jj * bk)[:, None] == centers
+                      ).astype(jnp.float32) * w[:, None]
+            sums_ref[jj * bk:(jj + 1) * bk, :] += jax.lax.dot_general(
+                onehot, x, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            cnt_ref[jj * bk:(jj + 1) * bk] += jnp.sum(onehot, axis=0)
+        cost_ref[0, 0] += jnp.sum(w * d2_scr[...])
+
+
+def _pad_chunked(x, w, c, c_valid, bn, bk):
+    n, _ = x.shape
+    k = c.shape[0]
+    cv = (jnp.ones((k,), jnp.int8) if c_valid is None
+          else c_valid.astype(jnp.int8))
+    kp = -(-k // bk) * bk
+    xp = jnp.pad(x, ((0, -n % bn), (0, 0)))
+    wp = jnp.pad(w, (0, -n % bn))                    # weight-0 rows are no-ops
+    cp = jnp.pad(c, ((0, kp - k), (0, 0)))
+    cvp = jnp.pad(cv, (0, kp - k))                   # padded centers invalid
+    return xp, wp, cp, cvp, kp
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "bn", "k_chunk",
+                                    "acc_budget"))
+def fused_assign_reduce_chunked_pallas(
+        x: jax.Array, w: jax.Array, c: jax.Array,
+        c_valid: Optional[jax.Array] = None,
+        *, interpret: bool = False, bn: Optional[int] = None,
+        k_chunk: Optional[int] = None,
+        acc_budget: int = _CHUNK_ACC_BUDGET
+        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-K one-sweep Lloyd step for center sets beyond VMEM.
+
+    ONE grid walk: (point panel x center chunk, chunk innermost) keeps
+    each x panel resident while center chunks stream by, tracks the
+    running (min, argmin) in VMEM scratch, and — once the last chunk
+    finalizes a panel — scatters the weighted one-hot into (kp, d) + (kp,)
+    accumulators that stay resident for the entire walk. ``x`` is read
+    from HBM exactly once; the (n,) assignment never exists in HBM.
+    Center sets whose accumulators exceed ``acc_budget`` bytes fall back
+    to the legacy two-walk variant (assign walk + scatter walk).
+    """
+    n, d = x.shape
+    k = c.shape[0]
+    t_bn, t_bk = chunk_sizes(d, str(x.dtype))
+    bn = clamp_bn(t_bn if bn is None else bn, n)
+    bk = t_bk if k_chunk is None else k_chunk
+    kp = -(-k // bk) * bk
+    if kp * (d + 1) * 4 > acc_budget:
+        return _fused_assign_reduce_chunked_twopass(
+            x, w, c, c_valid, interpret=interpret, bn=bn, bk=bk)
+    xp, wp, cp, cvp, kp = _pad_chunked(x, w, c, c_valid, bn, bk)
+
+    np_ = xp.shape[0] // bn
+    nc = kp // bk
+    sums, counts, cost = pl.pallas_call(
+        functools.partial(_fused_chunked_kernel, bk=bk, nc=nc),
+        grid=(np_, nc),                              # chunk axis innermost
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((kp, d), lambda i, j: (0, 0)),  # walk-resident
+            pl.BlockSpec((kp,), lambda i, j: (0,)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kp, d), jnp.float32),
+            jax.ShapeDtypeStruct((kp,), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn,), jnp.float32),
+                        pltpu.VMEM((bn,), jnp.int32)],
+        interpret=interpret,
+    )(xp, wp, cp, cvp)
+    return sums[:k], counts[:k], cost[0, 0]
 
 
 def _assign_chunked_kernel(x_ref, w_ref, c_ref, cv_ref,
@@ -333,35 +670,18 @@ def _reduce_chunked_kernel(x_ref, w_ref, a_ref, sums_ref, cnt_ref,
     cnt_ref[...] += jnp.sum(onehot, axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fused_assign_reduce_chunked_pallas(
+def _fused_assign_reduce_chunked_twopass(
         x: jax.Array, w: jax.Array, c: jax.Array,
-        c_valid: Optional[jax.Array] = None,
-        *, interpret: bool = False
-        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Chunked-K one-sweep Lloyd step for center sets beyond VMEM.
-
-    Two grid walks: (point panel x center chunk, chunk innermost) computes
-    the running (min, argmin) and weighted cost with ``x`` resident across
-    chunks — one HBM read of ``x``; then (center chunk x point panel,
-    panel innermost) scatters the weighted one-hot into each resident
-    (k_chunk, d) accumulator. Lifts the ``_MAX_PALLAS_K`` fallback so
-    EIM11-sized center sets stay on the Pallas path.
-    """
+        c_valid: Optional[jax.Array], *, interpret: bool,
+        bn: int, bk: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Legacy two-walk chunked fused step — the fallback for center sets
+    whose (kp, d) accumulators exceed ``_CHUNK_ACC_BUDGET``. Walk one
+    (chunk innermost) computes (min, argmin) + cost with x resident
+    across chunks; walk two (panel innermost) re-streams x once per
+    center chunk to scatter into each chunk's resident accumulator."""
     n, d = x.shape
     k = c.shape[0]
-    if c_valid is None:
-        c_valid = jnp.ones((k,), jnp.int8)
-    else:
-        c_valid = c_valid.astype(jnp.int8)
-
-    bn, bk = chunk_sizes(d)
-    bn = clamp_bn(bn, n)
-    kp = -(-k // bk) * bk
-    xp = jnp.pad(x, ((0, -n % bn), (0, 0)))
-    wp = jnp.pad(w, (0, -n % bn))                    # weight-0 rows are no-ops
-    cp = jnp.pad(c, ((0, kp - k), (0, 0)))
-    cvp = jnp.pad(c_valid, (0, kp - k))              # padded centers invalid
+    xp, wp, cp, cvp, kp = _pad_chunked(x, w, c, c_valid, bn, bk)
 
     np_ = xp.shape[0] // bn
     nc = kp // bk
@@ -432,17 +752,21 @@ def _remove_chunked_kernel(x_ref, a_ref, c_ref, cv_ref, v_ref,
         live_ref[0] += jnp.sum(keep.astype(jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "bn", "k_chunk"))
 def remove_below_chunked_pallas(x: jax.Array, c: jax.Array,
                                 alive: jax.Array, v: jax.Array,
                                 c_valid: Optional[jax.Array] = None,
-                                *, interpret: bool = False
+                                *, interpret: bool = False,
+                                bn: Optional[int] = None,
+                                k_chunk: Optional[int] = None
                                 ) -> Tuple[jax.Array, jax.Array]:
     """Chunked-K fused SOCCER removal for center sets beyond VMEM.
 
     Same contract as ``remove_below_pallas``; the center set streams
     through VMEM in ``tuning.chunk_sizes`` panels (chunk axis innermost,
-    each point panel resident across chunks) with a running min per point.
+    each point panel resident across chunks) with a running min per point
+    — already a single grid walk of ``x``.
     """
     m, p, d = x.shape
     k = c.shape[0]
@@ -451,8 +775,9 @@ def remove_below_chunked_pallas(x: jax.Array, c: jax.Array,
     else:
         c_valid = c_valid.astype(jnp.int8)
 
-    bn, bk = chunk_sizes(d)
-    bn = clamp_bn(bn, p)
+    t_bn, t_bk = chunk_sizes(d, str(x.dtype))
+    bn = clamp_bn(t_bn if bn is None else bn, p)
+    bk = t_bk if k_chunk is None else k_chunk
     kp = -(-k // bk) * bk
     xp = jnp.pad(x, ((0, 0), (0, -p % bn), (0, 0)))
     ap = jnp.pad(alive.astype(jnp.int8), ((0, 0), (0, -p % bn)))  # pad = dead

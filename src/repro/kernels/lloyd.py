@@ -10,7 +10,7 @@ registers/VMEM and drives the (k, bn) @ (bn, d) product through the MXU.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,12 +40,14 @@ def _lloyd_kernel(x_ref, w_ref, a_ref, sums_ref, cnt_ref, *, k: int):
     cnt_ref[...] += jnp.sum(onehot, axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "bn"))
 def lloyd_reduce_pallas(x: jax.Array, w: jax.Array, assign: jax.Array,
-                        k: int, *, interpret: bool = False
+                        k: int, *, interpret: bool = False,
+                        bn: Optional[int] = None
                         ) -> Tuple[jax.Array, jax.Array]:
     n, d = x.shape
-    bn, _ = block_sizes(d, k)                 # shared (d, k) autotune table
+    if bn is None:
+        bn, _ = block_sizes(d, k, str(x.dtype))   # shared autotune table
     bn = clamp_bn(bn, n)
     n_pad = -n % bn
     xp = jnp.pad(x, ((0, n_pad), (0, 0)))

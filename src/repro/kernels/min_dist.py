@@ -57,12 +57,17 @@ def _min_dist_kernel(x_ref, c_ref, cv_ref, d2_ref, idx_ref, *, bk: int):
     d2_ref[...] = jnp.where(better, local_min, prev_min)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "bn", "bk"))
 def min_dist_pallas(x: jax.Array, c: jax.Array,
                     c_valid: Optional[jax.Array] = None,
-                    *, interpret: bool = False
+                    *, interpret: bool = False,
+                    bn: Optional[int] = None, bk: Optional[int] = None
                     ) -> Tuple[jax.Array, jax.Array]:
-    """Pallas min-distance; pads n/k to block multiples, trims on return."""
+    """Pallas min-distance; pads n/k to block multiples, trims on return.
+
+    ``bn``/``bk`` override the tuned panel sizes (static, so the autotune
+    sweep can retrace per candidate past the jit cache).
+    """
     n, d = x.shape
     k = c.shape[0]
     if c_valid is None:
@@ -70,9 +75,9 @@ def min_dist_pallas(x: jax.Array, c: jax.Array,
     else:
         c_valid = c_valid.astype(jnp.int8)
 
-    bn, bk = block_sizes(d, k)                # shared (d, k) autotune table
-    bn = clamp_bn(bn, n)
-    bk = clamp_bn(bk, k)
+    t_bn, t_bk = block_sizes(d, k, str(x.dtype))  # shared autotune table
+    bn = clamp_bn(t_bn if bn is None else bn, n)
+    bk = clamp_bn(t_bk if bk is None else bk, k)
     n_pad = -n % bn
     k_pad = -k % bk
     xp = jnp.pad(x, ((0, n_pad), (0, 0)))

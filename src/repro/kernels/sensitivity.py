@@ -68,10 +68,11 @@ def _sensitivity_kernel(x_ref, w_ref, c_ref, cv_ref,
     cost_ref[0, 0] += jnp.sum(s)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "bn"))
 def sensitivity_scores_pallas(x: jax.Array, w: jax.Array, c: jax.Array,
                               c_valid: Optional[jax.Array] = None,
-                              *, interpret: bool = False
+                              *, interpret: bool = False,
+                              bn: Optional[int] = None
                               ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                          jax.Array]:
     """One-sweep sensitivity pass: ((n,) scores, (n,) assign, (k,) mass,
@@ -83,10 +84,11 @@ def sensitivity_scores_pallas(x: jax.Array, w: jax.Array, c: jax.Array,
     else:
         c_valid = c_valid.astype(jnp.int8)
 
-    bn, _ = block_sizes(d, k)
     kp = -(-k // 128) * 128                          # centers stay resident
-    if kp >= 512:                                    # keep the (bn, kp) one-hot
-        bn = min(bn, 256)                            # inside the VMEM budget
+    if bn is None:
+        bn, _ = block_sizes(d, k, str(x.dtype))
+        if kp >= 512:                                # keep the (bn, kp) one-hot
+            bn = min(bn, 256)                        # inside the VMEM budget
     bn = clamp_bn(bn, n)
     xp = jnp.pad(x, ((0, -n % bn), (0, 0)))
     wp = jnp.pad(w, (0, -n % bn))                    # weight-0 rows are no-ops

@@ -1,6 +1,74 @@
-"""TPU v5e hardware constants (the TARGET platform of this build)."""
+"""Hardware peaks: TPU v5e constants (the TARGET platform of this build)
+plus a measured calibration of whatever device the process runs on.
+
+The static constants below drive the *projected* roofline columns of the
+benchmark reports. ``measured_peaks()`` complements them: it
+microbenchmarks the current device's realizable matmul throughput and
+memory bandwidth so ``bench_kernels`` can report a measured
+``roofline_fraction`` per kernel row — achieved fraction of what this
+hardware (not the spec sheet) sustains. On the CPU container that
+calibrates the XLA oracle path; on TPU it calibrates the chip itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
 
 PEAK_FLOPS_BF16 = 197e12     # per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_LINK_BW = 50e9           # bytes/s per link (~50 GB/s/link)
 HBM_BYTES = 16 * 2**30       # 16 GiB per chip
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePeaks:
+    backend: str        # jax.default_backend() the calibration ran on
+    flops: float        # sustained f32 matmul flops/s
+    mem_bw: float       # sustained memory read+write bytes/s
+
+    def roofline_s(self, flops: float, bytes_moved: float) -> float:
+        """Best-case seconds for a kernel moving ``bytes_moved`` through
+        memory while executing ``flops`` — the measured-peak analogue of
+        the analytic v5e roofline."""
+        return max(flops / self.flops, bytes_moved / self.mem_bw)
+
+
+def _median_time(fn, iters: int = 3) -> float:
+    import jax
+    jax.block_until_ready(fn())      # compile + warm-up
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+@functools.lru_cache(maxsize=None)
+def measured_peaks(matmul_dim: int = 1024, copy_mib: int = 64
+                   ) -> DevicePeaks:
+    """Calibrate the current device once per process.
+
+    flops: square f32 matmul (2 * dim^3 flops); mem_bw: array copy
+    (read + write of ``copy_mib`` MiB). Both are generous upper bounds
+    for the clustering kernels' mixed workloads, so roofline_fraction
+    stays <= ~1 and a regression shows up as the fraction dropping.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    a = jnp.ones((matmul_dim, matmul_dim), jnp.float32)
+    mm = jax.jit(lambda a: a @ a)
+    t_mm = _median_time(lambda: mm(a))
+    flops = 2.0 * matmul_dim**3 / max(t_mm, 1e-9)
+
+    n = copy_mib * 2**20 // 4
+    buf = jnp.ones((n,), jnp.float32)
+    cp = jax.jit(lambda b: b + 1.0)      # one read + one write per element
+    t_cp = _median_time(lambda: cp(buf))
+    mem_bw = 2.0 * 4.0 * n / max(t_cp, 1e-9)
+
+    return DevicePeaks(backend=jax.default_backend(), flops=flops,
+                       mem_bw=mem_bw)

@@ -14,20 +14,22 @@ from typing import Optional, Sequence
 _COLUMNS = (
     ("scenario", 22), ("algo", 16), ("condition", 16), ("cost_ratio", 10),
     ("rounds", 6), ("uplink_pts", 10), ("uplink_MB", 9), ("time_s", 7),
+    ("compile_s", 9),
 )
 
 
 def _fmt(row: dict) -> Sequence[str]:
     if row.get("skipped"):
         return (row["scenario"], row["algo"], row["condition"],
-                "—", "—", "—", "—", "—")
+                "—", "—", "—", "—", "—", "—")
     return (
         row["scenario"], row["algo"], row["condition"],
         f"{row['cost_ratio']:.3f}",
         str(row["rounds"]),
         str(row["uplink_points"]),
         f"{row['uplink_bytes'] / 1e6:.3f}",
-        f"{row['wall_time_s']:.2f}",
+        f"{row['wall_time_s']:.2f}",       # steady-state (compile excluded)
+        f"{row.get('compile_s', 0.0):.2f}",
     )
 
 

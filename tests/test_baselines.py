@@ -37,6 +37,26 @@ def test_kmeans_parallel_oversampling_count(data):
     assert res.rounds == 3
 
 
+def test_kmeans_parallel_round_traces_once(data):
+    """The k-means|| seed rounds run as one lax.scan: the round body is
+    traced a constant (small) number of times no matter how many rounds
+    execute — a regression guard against reintroducing the host loop that
+    retraced (and re-jitted) every round."""
+    from repro.core import kmeans_parallel as kp
+    _, parts, _ = data
+
+    def traces(rounds, seed):
+        base = kp.TRACE_COUNTS["one_round"]
+        run_kmeans_parallel(parts, k=K, rounds=rounds, seed=seed)
+        return kp.TRACE_COUNTS["one_round"] - base
+
+    t2 = traces(2, seed=11)
+    t6 = traces(6, seed=12)
+    assert t2 == t6 <= 3, (
+        f"round body traced {t2} (2 rounds) vs {t6} (6 rounds); "
+        f"must be constant in rounds")
+
+
 def test_eim11_runs_and_broadcast_dominates(data):
     xg, parts, means = data
     eim = run_eim11(parts, k=K, epsilon=0.1, max_rounds=8, seed=1)

@@ -257,6 +257,130 @@ def test_all_zero_weights(name, n, d, k):
     assert float(cost) == 0.0
 
 
+# ---- pipelined / single-walk variants ---------------------------------
+
+# (name, n, d, k): multi-panel walks so the double-buffered DMA pattern
+# actually rotates slots (bn=128 forced -> ceil(n/128) panels)
+PIPELINED_SHAPES = [
+    ("multi_panel", 2600, 16, 32),        # 21 panels, odd tail
+    ("two_panels", 256, 8, 5),            # exactly 2 panels = 2 slots
+    ("one_panel", 100, 8, 5),             # degenerate: prefetch never fires
+]
+PIPE_IDS = [s[0] for s in PIPELINED_SHAPES]
+
+
+@pytest.mark.parametrize("name,n,d,k", PIPELINED_SHAPES, ids=PIPE_IDS)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16", "f16"])
+def test_fused_assign_reduce_pipelined_conforms(name, n, d, k, dtype):
+    """The explicit double-buffered DMA variant against the oracle: same
+    contract as fused_assign_reduce, input stream driven by manual
+    HBM->VMEM copies instead of BlockSpec streaming."""
+    from repro.kernels.fused_lloyd import fused_assign_reduce_pipelined_pallas
+    x, w, c, valid = _data(n, d, k, dtype, seed=8 * n + d + k)
+    tol, tight = _tols(dtype)
+    for cv in (None, valid):
+        s_r, c_r, cost_r = ref.fused_assign_reduce_ref(x, w, c, cv)
+        s_o, c_o, cost_o = fused_assign_reduce_pipelined_pallas(
+            x, w, c, cv, interpret=True, bn=128)
+        np.testing.assert_allclose(s_o, s_r, rtol=tol, atol=tol)
+        np.testing.assert_allclose(c_o, c_r, rtol=tight, atol=tight)
+        np.testing.assert_allclose(cost_o, cost_r, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("name,n,d,k", PIPELINED_SHAPES, ids=PIPE_IDS)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16", "f16"])
+def test_update_min_dist_pipelined_conforms(name, n, d, k, dtype):
+    """The seeding variant double-buffers the OUTPUT stream too (per-panel
+    VMEM->HBM write-back DMA with slot-reuse drains) — the riskiest DMA
+    choreography in the kernel layer, so it gets its own grid."""
+    from repro.kernels.fused_lloyd import update_min_dist_pipelined_pallas
+    kc = min(k, 37)
+    x, w, c, valid = _data(n, d, kc, dtype, seed=9 * n + d + k)
+    rng = np.random.default_rng(n + d)
+    d2 = jnp.asarray(rng.random(n) * float(d), jnp.float32)
+    tol, _ = _tols(dtype)
+    for cv in (None, valid[:kc]):
+        d2_r, m_r = ref.update_min_dist_ref(x, w, c, d2, cv)
+        d2_o, m_o = update_min_dist_pipelined_pallas(
+            x, w, c, d2, cv, interpret=True, bn=128)
+        np.testing.assert_allclose(d2_o, d2_r, rtol=tol, atol=tol)
+        np.testing.assert_allclose(m_o, m_r, rtol=tol)
+
+
+def test_pipelined_dispatch_matches_ref(monkeypatch):
+    """ops dispatches to the pipelined variants above _PIPELINE_MIN_N —
+    lower the threshold and check the public entry points still conform
+    (under REPRO_KERNEL_BACKEND=ref this exercises the oracle as usual)."""
+    monkeypatch.setattr(ops, "_PIPELINE_MIN_N", 256)
+    x, w, c, valid = _data(700, 8, 5, jnp.float32, seed=12)
+    s_r, c_r, cost_r = ref.fused_assign_reduce_ref(x, w, c, valid)
+    s_o, c_o, cost_o = ops.fused_assign_reduce(x, w, c, valid)
+    np.testing.assert_allclose(s_o, s_r, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(c_o, c_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(cost_o, cost_r, rtol=2e-3)
+    d2 = jnp.asarray(np.random.default_rng(13).random(700), jnp.float32)
+    d2_r, m_r = ref.update_min_dist_ref(x, w, c, d2, valid)
+    d2_o, m_o = ops.update_min_dist(x, w, c, d2, valid)
+    np.testing.assert_allclose(d2_o, d2_r, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(m_o, m_r, rtol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16", "f16"])
+def test_chunked_single_walk_and_fallback_agree(dtype):
+    """The single-walk chunked-K kernel (walk-resident accumulators,
+    per-chunk scatter at the last chunk) and the legacy two-walk fallback
+    (forced via a zero accumulator budget) must both match the oracle —
+    the byte model in bench_kernels assumes the one-walk path."""
+    from repro.kernels.fused_lloyd import fused_assign_reduce_chunked_pallas
+    x, w, c, valid = _data(300, 10, 1500, dtype, seed=14)
+    tol, tight = _tols(dtype)
+    for cv in (None, valid):
+        s_r, c_r, cost_r = ref.fused_assign_reduce_ref(x, w, c, cv)
+        for budget in (None, 1):          # default one-walk, forced two-walk
+            kw = {} if budget is None else {"acc_budget": budget}
+            s_o, c_o, cost_o = fused_assign_reduce_chunked_pallas(
+                x, w, c, cv, interpret=True, **kw)
+            np.testing.assert_allclose(s_o, s_r, rtol=tol, atol=tol)
+            np.testing.assert_allclose(c_o, c_r, rtol=tight, atol=tight)
+            np.testing.assert_allclose(cost_o, cost_r, rtol=tol, atol=tol)
+
+
+def test_scanned_seeding_conforms():
+    """The lax.scan D²-seeding path through whichever backend the env
+    selects (make test-kernels runs this under ref AND pallas): every
+    center is a data row, the seeding is deterministic per key, and the
+    scan traces its step body a constant number of times regardless of k
+    (the compile-once contract of the seeding rewrite)."""
+    import jax
+    from repro.core import kmeans
+
+    rng = np.random.default_rng(15)
+    x = jnp.asarray(rng.normal(size=(500, 6)), jnp.float32)
+    w = jnp.ones((500,), jnp.float32)
+
+    base = dict(kmeans.TRACE_COUNTS)
+    c1 = kmeans.kmeans_plusplus(jax.random.PRNGKey(0), x, w, 5)
+    t_small = kmeans.TRACE_COUNTS["kmeans_plusplus_step"] - base.get(
+        "kmeans_plusplus_step", 0)
+
+    # each chosen center must be an actual data row
+    d2 = np.min(np.sum((np.asarray(c1)[:, None, :]
+                        - np.asarray(x)[None]) ** 2, -1), axis=1)
+    np.testing.assert_allclose(d2, 0.0, atol=1e-8)
+
+    # determinism per key
+    c2 = kmeans.kmeans_plusplus(jax.random.PRNGKey(0), x, w, 5)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+    # trace count does not grow with k (fresh k -> fresh trace, but the
+    # scan body is traced the same constant number of times)
+    base = dict(kmeans.TRACE_COUNTS)
+    kmeans.kmeans_plusplus(jax.random.PRNGKey(1), x, w, 11)
+    t_large = kmeans.TRACE_COUNTS["kmeans_plusplus_step"] - base.get(
+        "kmeans_plusplus_step", 0)
+    assert t_large == t_small <= 3
+
+
 def test_every_entry_point_covered():
     """Adding an ops.py entry point without conformance coverage fails
     here — extend the grid above and this set together. The public

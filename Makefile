@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all test-kernels smoke bench-kernels bench scenarios lint autotune
+.PHONY: test test-all test-kernels smoke bench-kernels bench scenarios lint autotune stream-demo
 
 smoke:           ## quickstart example + one fit() per registered algorithm
 	$(PYTHON) examples/quickstart.py
@@ -29,6 +29,9 @@ autotune:        ## measure best kernel block sizes on THIS hardware
 
 scenarios:       ## quick paper-suite scenario sweep -> BENCH_scenarios.json
 	$(PYTHON) -m repro.scenarios.run --suite paper --quick
+
+stream-demo:     ## streaming fold/warm-start/serve loop on a drifting mixture
+	$(PYTHON) examples/streaming_clustering.py
 
 lint:            ## CI lint job (critical rules only; config in ruff.toml)
 	ruff check src tests benchmarks

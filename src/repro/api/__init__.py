@@ -15,7 +15,7 @@ from repro.api.backends import (Backend, CommBackend, MeshBackend,
 from repro.api.registry import (get_algorithm, list_algorithms,
                                 register_algorithm)
 from repro.api.result import ClusterResult, uplink_bytes
-from repro.api.facade import fit
+from repro.api.facade import fit, fit_update
 from repro.api import algorithms as _algorithms  # noqa: F401  (registers
                                                  # the built-in drivers)
 from repro.coresets import algorithms as _coreset_algorithms  # noqa: F401
@@ -23,6 +23,7 @@ from repro.coresets import algorithms as _coreset_algorithms  # noqa: F401
 
 __all__ = [
     "Backend", "ClusterResult", "CommBackend", "MeshBackend",
-    "VirtualBackend", "fit", "get_algorithm", "list_algorithms",
+    "VirtualBackend", "fit", "fit_update", "get_algorithm",
+    "list_algorithms",
     "register_algorithm", "resolve_backend", "uplink_bytes",
 ]

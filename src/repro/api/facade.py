@@ -169,3 +169,20 @@ def fit(x, k: int, algo: str = "soccer", backend="auto", *,
         res.params["failure_plan"] = failure_plan
         res.params.pop("on_round", None)
     return res
+
+
+def fit_update(result: ClusterResult, x_new, **kwargs) -> ClusterResult:
+    """Incrementally fold a new batch into a previous ``fit`` result.
+
+    The streaming counterpart of ``fit``: machine-local merge-and-reduce
+    coreset trees absorb the batch (zero uplink), Lloyd warm-starts from
+    the previous centers over the tree coreset, and a full SOCCER
+    re-cluster fires only when the drift trigger (SOCCER's own stopping
+    rule on costs) says the centers went stale. See
+    ``repro.streaming.update.fit_update`` for the knobs and the uplink
+    accounting contract.
+    """
+    # local import: repro.streaming imports repro.api back (registry,
+    # result), so binding at call time keeps the package import acyclic
+    from repro.streaming.update import fit_update as _fit_update
+    return _fit_update(result, x_new, **kwargs)

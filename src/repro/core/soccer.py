@@ -307,6 +307,20 @@ def effective_n(m: int, p: int, w: Optional[jax.Array],
     return max(int(round(float(np.sum(w_np)))), 1)
 
 
+def stopping_rule(remaining: float, capacity: float, prev: float) -> bool:
+    """THE SOCCER host-loop predicate: issue more work iff ``remaining``
+    still exceeds ``capacity`` AND the last step made progress
+    (``remaining < prev``; pass ``math.inf`` before the first step).
+
+    ``run_soccer`` evaluates it on live-point counts against the
+    coordinator capacity eta — "rounds only when needed". The streaming
+    drift trigger (``repro.streaming.update``) evaluates the same
+    predicate on the tree-coreset cost against the re-cluster budget
+    ``drift_tol * ref_cost`` — "re-clusters only when needed".
+    """
+    return remaining > capacity and remaining < prev
+
+
 def run_soccer(x_parts: jax.Array, params: SoccerParams, *,
                backend=None,
                key: Optional[jax.Array] = None,
@@ -342,20 +356,20 @@ def run_soccer(x_parts: jax.Array, params: SoccerParams, *,
         functools.partial(soccer_finalize, comm=comm, const=const),
         (STATE_MARKS,), STATE_MARKS)
 
+    # The progress half of stopping_rule doubles as the no-progress
+    # guard: if the threshold cannot remove anything (e.g. the truncation
+    # mass exceeds N — coordinator far too small for this n), further
+    # rounds are pure overhead; finalize on a subsample instead of
+    # spinning to max_rounds.
     rounds = 0
-    prev_n = int(state.n_remaining)
-    while rounds < const.max_rounds and int(state.n_remaining) > const.eta:
+    prev_n = math.inf
+    while rounds < const.max_rounds and stopping_rule(
+            int(state.n_remaining), const.eta, prev_n):
+        prev_n = int(state.n_remaining)
         state = step(state)
         rounds += 1
         if on_round is not None:
             state = on_round(rounds, state) or state
-        # no-progress guard: if the threshold cannot remove anything
-        # (e.g. the truncation mass exceeds N — coordinator far too small
-        # for this n), further rounds are pure overhead; finalize on a
-        # subsample instead of spinning to max_rounds.
-        if int(state.n_remaining) >= prev_n:
-            break
-        prev_n = int(state.n_remaining)
     state = fin(state)
 
     return SoccerResult(

@@ -12,12 +12,13 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs.soccer_paper import GaussianMixtureSpec
-from repro.data.synthetic import (contaminate, gaussian_mixture,
-                                  heavy_tailed_mixture,
+from repro.data.synthetic import (contaminate, drifting_mixture,
+                                  gaussian_mixture, heavy_tailed_mixture,
                                   kmeans_parallel_hard_instance)
 from repro.ft.failures import FailurePlan
 from repro.scenarios.registry import (Condition, Scenario, ScenarioData,
                                       register_scenario)
+from repro.streaming.protocol import StreamPolicy
 
 # Shared quick-mode shape (see module docstring).
 _QUICK_N, _QUICK_DIM, _QUICK_K = 6144, 15, 8
@@ -260,6 +261,76 @@ def int8_coreset() -> Scenario:
             Condition("int8_coreset", dict(uplink_dtype="int8",
                                            uplink_mode="coreset"),
                       note="int8 x coreset-compressed uplink"),
+        ))
+
+
+# ---------------------------------------------------------------- streaming
+# Shared streaming-policy grid: the gold-standard full re-cluster every
+# step vs fit_update at cadence 1 and 4. eta_override pins the SOCCER
+# constants so the full-refit baseline keeps one jit signature across
+# the growing prefix (and sizes the escalation re-clusters identically).
+_STREAM_ETA = dict(eta_override=1024)
+_STREAM_POLICIES = (
+    StreamPolicy("full_every_step", mode="full", cadence=1,
+                 fit_params=_STREAM_ETA),
+    StreamPolicy("update_c1", mode="update", cadence=1, recluster="auto",
+                 refine_iters=2, drift_tol=1.5, fit_params=_STREAM_ETA),
+    StreamPolicy("update_c4", mode="update", cadence=4, recluster="auto",
+                 refine_iters=2, drift_tol=1.5, fit_params=_STREAM_ETA),
+)
+
+
+def _drift_batches(drift: float, birth: bool, seed: int):
+    def make(quick: bool):
+        steps = 12 if quick else 24
+        batches, _ = drifting_mixture(
+            steps=steps, n_per_step=768 if quick else 4096,
+            k=_QUICK_K if quick else 16, dim=8, drift=drift, sigma=0.02,
+            birth_step=(steps // 2 if birth else None), seed=seed)
+        return batches
+    return make
+
+
+@register_scenario
+def streaming_drift() -> Scenario:
+    """Time-evolving mixture: drifting means + a cluster birth mid-stream.
+
+    The streaming acceptance row: ``fit_update`` at a fixed cadence must
+    track the full-re-cluster-every-step gold standard to <= 1.1x final
+    cost on <= 25% of its cumulative (post-bootstrap) uplink bytes, with
+    the drift trigger escalating only around the injected birth.
+    """
+    return Scenario(
+        name="streaming_drift",
+        summary="drifting means + mid-stream cluster birth; staleness "
+                "cost vs recompute uplink per update policy",
+        make_data=lambda quick: ScenarioData(
+            x=np.concatenate(_drift_batches(0.04, True, 53)(quick))),
+        k=16, quick_k=_QUICK_K,
+        stream=_drift_batches(0.04, True, 53),
+        stream_policies=_STREAM_POLICIES)
+
+
+@register_scenario
+def streaming_stationary() -> Scenario:
+    """Stationary control stream: identical mixture every step.
+
+    The drift trigger must fire ZERO full re-clusters here — the cost of
+    the warm-started centers on the growing tree coreset never leaves
+    the reference band, so "re-clusters only when needed" means none.
+    """
+    return Scenario(
+        name="streaming_stationary",
+        summary="stationary control stream; drift trigger must stay quiet",
+        make_data=lambda quick: ScenarioData(
+            x=np.concatenate(_drift_batches(0.0, False, 59)(quick))),
+        k=16, quick_k=_QUICK_K,
+        stream=_drift_batches(0.0, False, 59),
+        stream_policies=(
+            _STREAM_POLICIES[0],
+            StreamPolicy("update_auto", mode="update", cadence=1,
+                         recluster="auto", refine_iters=2, drift_tol=1.5,
+                         fit_params=_STREAM_ETA),
         ))
 
 

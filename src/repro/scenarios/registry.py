@@ -77,6 +77,14 @@ class Scenario:
     head-to-head (e.g. the coreset-budget comparison needs
     ``coreset_kmeans`` in the row even though it is not a sweep
     default).
+
+    ``stream`` (when set) turns the scenario into a *streaming* one:
+    ``stream(quick)`` returns the batch sequence (a list of ``(n_i, d)``
+    arrays) and the sweep plays it against every policy in
+    ``stream_policies`` through ``repro.streaming.protocol`` — one row
+    per policy, scoring staleness cost vs recompute uplink instead of
+    the batch algo x condition grid (``algos``/``conditions`` are
+    ignored for these).
     """
     name: str
     summary: str
@@ -95,6 +103,8 @@ class Scenario:
     max_match_rounds: int = 8
     baseline_iters: int = 40
     tags: Tuple[str, ...] = ("paper",)
+    stream: Optional[Callable] = None          # quick -> list of batches
+    stream_policies: Tuple = ()                # streaming.StreamPolicy s
 
     def k_for(self, quick: bool) -> int:
         return self.quick_k if (quick and self.quick_k) else self.k

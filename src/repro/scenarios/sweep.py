@@ -134,13 +134,60 @@ def exact_baseline(data, k: int, seed: int, iters: int,
     return min(costs)
 
 
+def run_stream_scenario(scenario: Scenario, quick: bool = True,
+                        seed: int = 0, backend="virtual") -> list:
+    """One row per stream policy: the batch sequence from
+    ``scenario.stream(quick)`` played through the streaming protocol
+    runner, with the standard report columns (``cost_ratio`` is the
+    policy's final-centers cost over the whole stream vs the exact
+    centralized baseline; ``rounds`` counts full re-clusters) plus the
+    staleness/uplink comparison columns the acceptance criteria read."""
+    import time as _time
+
+    from repro.scenarios.registry import ScenarioData
+    from repro.streaming.protocol import run_stream_suite
+
+    batches = scenario.stream(quick)
+    k = scenario.k_for(quick)
+    data = ScenarioData(x=np.concatenate(batches))
+    base_cost = exact_baseline(data, k, seed, scenario.baseline_iters)
+    t0 = _time.perf_counter()
+    stream_rows = run_stream_suite(batches, k, scenario.stream_policies,
+                                   m=scenario.m, seed=seed, backend=backend)
+    wall = _time.perf_counter() - t0
+    rows = []
+    for r in stream_rows:
+        rows.append(dict(
+            scenario=scenario.name, algo="stream", condition=r["policy"],
+            k=k, m=scenario.m, skipped=False,
+            note=f"cadence={r['cadence']} mode={r['mode']}",
+            params={}, cost=r["final_cost"],
+            cost_ratio=r["final_cost"] / max(base_cost, 1e-30),
+            baseline_cost=base_cost,
+            rounds=r["reclusters"], centers=k,
+            uplink_points=r["uplink_points"],
+            uplink_bytes=r["uplink_bytes"],
+            wall_time_s=wall / max(len(stream_rows), 1), compile_s=0.0,
+            staleness_cost=r["staleness_cost"],
+            staleness_per_point=r["staleness_per_point"],
+            steps=r["steps"], version=r["version"],
+            cost_vs_full=r.get("cost_vs_full"),
+            staleness_vs_full=r.get("staleness_vs_full"),
+            uplink_frac_of_full=r.get("uplink_frac_of_full")))
+    return rows
+
+
 def run_scenario(scenario: Scenario, algos: Sequence[str] = DEFAULT_ALGOS,
                  quick: bool = True, seed: int = 0,
                  backend="virtual") -> list:
     """All algo x condition cells of one scenario (SOCCER cells first, so
     match_rounds cells have their cost target). A scenario with a pinned
     ``algos`` list runs exactly those algorithms regardless of the
-    sweep-wide selection."""
+    sweep-wide selection. Streaming scenarios (``scenario.stream``)
+    instead produce one row per stream policy."""
+    if scenario.stream is not None:
+        return run_stream_scenario(scenario, quick=quick, seed=seed,
+                                   backend=backend)
     if scenario.algos is not None:
         algos = scenario.algos
     data = scenario.make_data(quick)

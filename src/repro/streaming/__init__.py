@@ -1,0 +1,26 @@
+"""Streaming clustering service: merge-and-reduce trees, ``fit_update``,
+versioned serving, and the stream measurement protocol.
+
+    from repro.api import fit, fit_update
+    from repro.streaming import serve
+
+    res = fit(x0, k=25)                      # batch bootstrap
+    res = fit_update(res, x_new)             # fold + warm start (+ drift)
+    snap = serve.snapshot(res)
+    assign, d2, version = serve.serve_assign(snap, queries)
+"""
+from repro.streaming.state import StreamState, restore_stream, save_stream
+from repro.streaming.tree import (TRACE_COUNTS, flatten_tree, fold_batch,
+                                  resident_rows, stream_bucket, tree_epsilon)
+from repro.streaming.update import fit_update, init_stream
+from repro.streaming.serve import CenterSnapshot, serve_assign, snapshot
+from repro.streaming.protocol import (StreamPolicy, run_stream,
+                                      run_stream_suite)
+
+__all__ = [
+    "CenterSnapshot", "StreamPolicy", "StreamState", "TRACE_COUNTS",
+    "fit_update", "flatten_tree", "fold_batch", "init_stream",
+    "resident_rows", "restore_stream", "run_stream", "run_stream_suite",
+    "save_stream", "serve_assign", "snapshot", "stream_bucket",
+    "tree_epsilon",
+]

@@ -1,0 +1,110 @@
+"""Batched nearest-center serving against versioned center snapshots.
+
+The query path of the streaming service: requests arrive in batches
+(``examples/serve_lm.py``-style serving loop — a jitted step over
+fixed-shape batches), each batch is assigned to its nearest current
+center through the same fused kernel entry points the training path
+uses (``kernels.ops.min_dist``), and every response is tagged with the
+**version** of the center snapshot that produced it, so an assignment
+can always be traced to the exact centers it was scored against even
+while ``fit_update`` rotates them underneath.
+
+Snapshots are immutable; ``snapshot(result)`` captures the current
+centers + version from any ``fit``/``fit_update`` result, and versions
+are monotone (``StreamState.version`` increments on every center
+change), so a cache keyed on ``(version, point)`` can never serve a
+stale hit as fresh.
+
+Queries of arbitrary count are chunked to ``stream_bucket``-rounded
+widths (weight-free padding rows are sliced off the result), so a live
+query stream produces O(log max_batch) jit signatures, same as the
+update path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.result import ClusterResult
+from repro.kernels import ops
+from repro.streaming.tree import stream_bucket
+
+#: Default serving batch width (rows per kernel dispatch). Big enough to
+#: keep the fused sweep bandwidth-bound, small enough that one straggler
+#: batch doesn't stall the queue.
+SERVE_BATCH = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class CenterSnapshot:
+    """An immutable, versioned center set the serving path scores against."""
+    centers: np.ndarray                 # (k, d) float32
+    version: int                        # monotone; from StreamState.version
+
+    @property
+    def k(self) -> int:
+        return self.centers.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.centers.shape[1]
+
+
+def snapshot(result: ClusterResult) -> CenterSnapshot:
+    """Capture the serving snapshot from a ``fit``/``fit_update`` result.
+
+    Batch ``fit`` results (no stream state) serve as version 0; every
+    ``fit_update`` bumps the version with the center change.
+    """
+    state = result.extra.get("stream")
+    if state is not None:
+        return CenterSnapshot(np.asarray(state.centers, np.float32),
+                              int(state.version))
+    return CenterSnapshot(np.asarray(result.centers, np.float32)[-result.k:],
+                          0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _assign_batch(x: jax.Array, centers: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    d2, idx = ops.min_dist(x, centers)
+    return idx.astype(jnp.int32), d2
+
+
+def serve_assign(snap: CenterSnapshot, x, *,
+                 batch: int = SERVE_BATCH
+                 ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Assign a query batch to its nearest centers.
+
+    Args:
+      snap: the center snapshot to score against.
+      x: (n, d) query points, any n.
+      batch: rows per kernel dispatch; queries beyond it are chunked.
+
+    Returns:
+      (assign, d2, version): (n,) int32 nearest-center ids, (n,) float32
+      squared distances, and the snapshot version they were scored
+      against.
+    """
+    x = np.asarray(x, np.float32)
+    if x.ndim != 2 or x.shape[1] != snap.d:
+        raise ValueError(
+            f"queries must be (n, {snap.d}), got {x.shape}")
+    n = x.shape[0]
+    centers = jnp.asarray(snap.centers)
+    out_a = np.empty((n,), np.int32)
+    out_d = np.empty((n,), np.float32)
+    for off in range(0, n, batch):
+        chunk = x[off:off + batch]
+        width = stream_bucket(min(batch, chunk.shape[0]))
+        pad = np.zeros((width, x.shape[1]), np.float32)
+        pad[: chunk.shape[0]] = chunk
+        idx, d2 = _assign_batch(jnp.asarray(pad), centers)
+        out_a[off:off + chunk.shape[0]] = np.asarray(idx)[: chunk.shape[0]]
+        out_d[off:off + chunk.shape[0]] = np.asarray(d2)[: chunk.shape[0]]
+    return out_a, out_d, snap.version

@@ -1,0 +1,163 @@
+"""Per-machine merge-and-reduce coreset trees (the streaming compressor).
+
+The classic Bentley-Saxe / merge-and-reduce scheme in the distributed
+form of Balcan et al. (arXiv:1306.0604), with each tree node compressed
+by the sensitivity sampler of ``repro.coresets`` (the (1+eps)-coreset
+framing of Cohen-Addad et al., arXiv:2603.08615, bounds what one node
+loses):
+
+* every incoming ``(m, pb, d)`` batch is compressed machine-side to a
+  ``t``-row weighted coreset — a **level-0 bucket**;
+* when two buckets occupy the same level their union (``2t`` rows) is
+  re-compressed to ``t`` rows and promoted one level up — exactly a
+  binary-counter increment, so after ``B`` batches the occupied levels
+  are the set bits of ``B`` and each machine holds
+  ``t * popcount(B) <= t * (log2(B) + 1)`` resident rows: **O(t log n)
+  memory** for an unbounded stream;
+* a bucket at level ``l`` has been through ``l + 1`` compressions, so
+  its error compounds as ``(1 + eps_node)^(l+1)`` with
+  ``eps_node = O(sqrt(S / t))``, ``S <= 2`` (the sensitivity-sampling
+  bound checked in tests/test_coresets.py).  ``tree_epsilon`` reports
+  the compounded bound for the current height.
+
+The fold is host bookkeeping (the occupancy list is just the batch
+counter's binary representation) around two module-level jitted bodies,
+``_compress_batch`` and ``_merge_buckets``.  Both are traced once per
+static ``(shape, t, kb)`` signature — incoming batches are padded to
+``stream_bucket``-rounded widths (the ``clamp_bn`` tile idiom plus a
+power-of-two ceiling) so an arbitrary stream of batch sizes produces
+only O(log max_batch) distinct signatures.  ``TRACE_COUNTS`` records
+actual trace events; tests/test_streaming.py pins them.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.coresets.sensitivity import build_coreset
+
+# Times each traced body below was traced (NOT called) — the regression
+# test asserts folding B batches of varying sizes traces a constant
+# number of bodies (shape bucketing holds; no per-batch retrace).
+TRACE_COUNTS = collections.Counter()
+
+# One level's buckets across machines: ((m, t, d) points, (m, t) weights).
+Bucket = Tuple[jax.Array, jax.Array]
+
+
+def stream_bucket(n: int) -> int:
+    """Static per-machine batch width for an ``n``-row update.
+
+    Tile-round up to the 128-sublane grid (the ``clamp_bn`` idiom from
+    ``kernels.tuning`` — Pallas panels want tile multiples), then take
+    the next power of two so a stream of arbitrary batch sizes maps to
+    O(log max_batch) distinct jit signatures. Padding rows carry weight
+    0 and are never sampled by the compressor.
+    """
+    tiled = max(128, -(-int(n) // 128) * 128)
+    return 1 << (tiled - 1).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("t", "kb"))
+def _compress_batch(keys: jax.Array, x: jax.Array, w: jax.Array,
+                    t: int, kb: int) -> Bucket:
+    """(m, pb, d) weighted batch -> level-0 bucket ((m, t, d), (m, t))."""
+    TRACE_COUNTS["compress_batch"] += 1
+    return jax.vmap(build_coreset, (0, 0, 0, None, None))(keys, x, w, t, kb)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "kb"))
+def _merge_buckets(keys: jax.Array, pa: jax.Array, wa: jax.Array,
+                   pb: jax.Array, wb: jax.Array, t: int, kb: int) -> Bucket:
+    """Merge two same-level buckets: 2t-row union -> t-row coreset."""
+    TRACE_COUNTS["merge_buckets"] += 1
+    x = jnp.concatenate([pa, pb], axis=1)
+    w = jnp.concatenate([wa, wb], axis=1)
+    return jax.vmap(build_coreset, (0, 0, 0, None, None))(keys, x, w, t, kb)
+
+
+def _machine_keys(key: jax.Array, m: int) -> jax.Array:
+    ids = jnp.arange(m, dtype=jnp.int32)
+    return jax.vmap(jax.random.fold_in, (None, 0))(key, ids)
+
+
+def fold_batch(levels: List[Optional[Bucket]], occupied: List[bool],
+               key: jax.Array, x: jax.Array, w: jax.Array,
+               t: int, kb: int) -> None:
+    """Fold one padded ``(m, pb, d)`` batch into the tree, in place.
+
+    ``levels``/``occupied`` are the per-level bucket list and its
+    occupancy (a binary counter over batches); the carry cascade mutates
+    both. Weight-0 rows in ``w`` are padding and contribute nothing.
+    """
+    m = x.shape[0]
+    key, k_c = jax.random.split(key)
+    carry = _compress_batch(_machine_keys(k_c, m), x, w, t, kb)
+    lvl = 0
+    while True:
+        if lvl == len(levels):
+            levels.append(None)
+            occupied.append(False)
+        if not occupied[lvl]:
+            levels[lvl] = carry
+            occupied[lvl] = True
+            return
+        key, k_m = jax.random.split(key)
+        pa, wa = levels[lvl]
+        carry = _merge_buckets(_machine_keys(k_m, m), pa, wa,
+                               carry[0], carry[1], t, kb)
+        levels[lvl] = None
+        occupied[lvl] = False
+        lvl += 1
+
+
+def flatten_tree(levels: List[Optional[Bucket]], occupied: List[bool],
+                 m: int, t: int, d: int) -> Bucket:
+    """All resident rows as one fixed-width per-machine block.
+
+    Returns ``((m, L*t, d), (m, L*t))`` with ``L = len(levels)`` —
+    unoccupied levels contribute weight-0 rows, so the flattened width
+    changes only when the tree grows a level (O(log B) distinct shapes
+    over the stream, not one per occupancy pattern).
+    """
+    zero = None
+    pts, wts = [], []
+    for lvl in range(len(levels)):
+        if occupied[lvl]:
+            pts.append(levels[lvl][0])
+            wts.append(levels[lvl][1])
+        else:
+            if zero is None:
+                zero = (jnp.zeros((m, t, d), jnp.float32),
+                        jnp.zeros((m, t), jnp.float32))
+            pts.append(zero[0])
+            wts.append(zero[1])
+    if not pts:
+        return (jnp.zeros((m, t, d), jnp.float32),
+                jnp.zeros((m, t), jnp.float32))
+    return jnp.concatenate(pts, axis=1), jnp.concatenate(wts, axis=1)
+
+
+def resident_rows(occupied: List[bool], t: int) -> int:
+    """Rows held per machine right now (<= t * ceil(log2(B) + 1))."""
+    return t * sum(1 for o in occupied if o)
+
+
+def tree_epsilon(occupied: List[bool], t: int) -> float:
+    """Compounded relative-error bound of the current tree.
+
+    One sensitivity-coreset node concentrates at
+    ``eps_node ~ sqrt(S / t)`` with ``S <= 2``; a height-``h`` tree
+    composes to ``(1 + eps_node)^h - 1`` (Balcan et al. 1306.0604).
+    Bookkeeping only — the property test measures the realized error.
+    """
+    h = len(occupied)
+    if h == 0:
+        return 0.0
+    eps_node = math.sqrt(2.0 / max(t, 1))
+    return (1.0 + eps_node) ** h - 1.0

@@ -1,0 +1,334 @@
+"""Streaming subsystem: merge-and-reduce tree, drift-triggered
+``fit_update``, versioned serving, checkpoint round-trip, and the PR's
+acceptance criteria on the drifting-mixture streams."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import fit, fit_update
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.kmeans import kmeans
+from repro.core.metrics import centralized_cost
+from repro.coresets.sensitivity import build_coreset
+from repro.data.synthetic import drifting_mixture
+from repro.scenarios import get_scenario, list_scenarios
+from repro.streaming import (CenterSnapshot, StreamPolicy, TRACE_COUNTS,
+                             flatten_tree, fold_batch, resident_rows,
+                             restore_stream, run_stream_suite, save_stream,
+                             serve_assign, snapshot, stream_bucket,
+                             tree_epsilon)
+from repro.streaming.update import _shard_stream_batch
+
+
+def _mixture_batch(rng, n, means, sigma=0.05):
+    k, d = means.shape
+    lab = rng.integers(0, k, size=n)
+    return (means[lab] + sigma * rng.normal(size=(n, d))).astype(np.float32)
+
+
+MEANS4 = np.asarray([[0, 0, 0, 0], [6, 0, 0, 0],
+                     [0, 6, 0, 0], [0, 0, 6, 0]], np.float32)
+
+
+def _bootstrap(rng, means=MEANS4, n=1024):
+    x0 = _mixture_batch(rng, n, means)
+    return fit(x0, means.shape[0], algo="lloyd", backend="virtual", m=1,
+               seed=0, iters=20)
+
+
+# ---------------------------------------------------------------- tree
+def test_stream_bucket_is_tiled_pow2_and_monotone():
+    assert stream_bucket(1) == 128
+    assert stream_bucket(128) == 128
+    assert stream_bucket(129) == 256
+    assert stream_bucket(4096) == 4096
+    widths = [stream_bucket(n) for n in range(1, 3000)]
+    assert all(w % 128 == 0 for w in widths)
+    assert all(a <= b for a, b in zip(widths, widths[1:]))
+    # O(log max_batch) distinct signatures, not one per size
+    assert len(set(widths)) <= int(np.log2(3000)) + 2
+
+
+def test_trace_counts_fold_regression():
+    """Folding batches of five different sizes traces each jitted body
+    exactly once — the shape-bucketing regression the clamp_bn idiom is
+    supposed to guarantee (a retrace per batch size would show up here).
+    """
+    rng = np.random.default_rng(0)
+    t, kb, m = 80, 3, 4                  # unique (t, kb): fresh jit cache
+    levels, occupied = [], []
+    before = dict(TRACE_COUNTS)
+    key = jax.random.PRNGKey(0)
+    for i, n in enumerate([100, 390, 222, 512, 64]):
+        xs, ws = _shard_stream_batch(
+            rng.normal(size=(n, 3)).astype(np.float32), None, m)
+        assert xs.shape == (m, 128, 3)   # all sizes hit one bucket
+        key, kf = jax.random.split(key)
+        fold_batch(levels, occupied, kf, xs, ws, t, kb)
+    delta = {b: TRACE_COUNTS[b] - before.get(b, 0) for b in TRACE_COUNTS}
+    assert delta["compress_batch"] == 1
+    assert delta["merge_buckets"] == 1
+    # 5 folds == binary 101: levels 0 and 2 occupied, t rows each
+    assert occupied == [True, False, True]
+    assert resident_rows(occupied, t) == 2 * t
+    assert tree_epsilon(occupied, t) > 0.0
+
+
+def test_tree_matches_one_shot_coreset_cost():
+    """Property: centers fit on the flattened tree coreset cost about the
+    same on the full data as centers fit on a one-shot coreset of equal
+    size (the merge-and-reduce compounding stays benign at this height).
+    """
+    rng = np.random.default_rng(1)
+    m, t, kb, k = 2, 64, 4, 4
+    batches = [_mixture_batch(rng, 512, MEANS4) for _ in range(6)]
+    levels, occupied = [], []
+    key = jax.random.PRNGKey(7)
+    for b in batches:
+        xs, ws = _shard_stream_batch(b, None, m)
+        key, kf = jax.random.split(key)
+        fold_batch(levels, occupied, kf, xs, ws, t, kb)
+    pts, wts = flatten_tree(levels, occupied, m, t, batches[0].shape[1])
+    tree_x = np.asarray(pts).reshape(-1, 4)
+    tree_w = np.asarray(wts).reshape(-1)
+
+    full = np.concatenate(batches)
+    # the coreset preserves the stream's total mass (importance weights)
+    assert tree_w.sum() == pytest.approx(full.shape[0], rel=0.25)
+
+    n_rows = resident_rows(occupied, t) * m
+    key, ko = jax.random.split(key)
+    one_pts, one_w = build_coreset(ko, jnp.asarray(full),
+                                   jnp.ones((full.shape[0],), jnp.float32),
+                                   n_rows, kb)
+
+    def best_cost(x, w):
+        costs = []
+        for s in (0, 1):
+            c, _ = kmeans(jax.random.PRNGKey(s), jnp.asarray(x),
+                          jnp.asarray(w), k, 20)
+            costs.append(float(centralized_cost(jnp.asarray(full), c)))
+        return min(costs)
+
+    cost_tree = best_cost(tree_x, tree_w)
+    cost_one = best_cost(one_pts, one_w)
+    cost_full = best_cost(full, np.ones(full.shape[0], np.float32))
+    assert cost_tree <= 2.0 * max(cost_one, 1e-12)
+    assert cost_tree <= 2.5 * max(cost_full, 1e-12)
+
+
+# ----------------------------------------------------------- fit_update
+def test_fit_update_validation_errors():
+    rng = np.random.default_rng(2)
+    res = _bootstrap(rng)
+    with pytest.raises(ValueError, match="recluster"):
+        fit_update(res, _mixture_batch(rng, 256, MEANS4), m=4,
+                   recluster="sometimes")
+    with pytest.raises(ValueError, match="d="):
+        fit_update(res, rng.normal(size=(256, 7)).astype(np.float32),
+                   m=4, coreset_rows=128)
+    res2 = fit_update(res, _mixture_batch(rng, 256, MEANS4), m=4,
+                      coreset_rows=128)
+    with pytest.raises(ValueError, match="conflicts"):
+        fit_update(res2, _mixture_batch(rng, 256, MEANS4), m=8)
+
+
+def test_no_drift_never_reclusters():
+    """Stationary stream + auto trigger: the warm start tracks and the
+    drift trigger stays quiet — zero full re-clusters."""
+    rng = np.random.default_rng(3)
+    res = _bootstrap(rng)
+    for _ in range(5):
+        res = fit_update(res, _mixture_batch(rng, 1024, MEANS4), m=4,
+                         coreset_rows=128, refine_iters=2, drift_tol=1.5)
+        assert res.extra["reclustered"] is False
+    assert res.rounds == 0
+    assert res.extra["stream"].n_reclusters == 0
+    # uplink is the flat warm-start refine cost, every update
+    assert list(res.uplink_points) == [4 * 4 * 2] * 5
+
+
+def test_injected_shift_fires_drift_trigger():
+    """A mean shift the warm start cannot track pushes the per-weight
+    tree cost over ``drift_tol * ref_cost`` and fires the re-cluster —
+    and the re-cluster actually fixes the centers."""
+    rng = np.random.default_rng(4)
+    res = _bootstrap(rng)
+    for _ in range(3):
+        res = fit_update(res, _mixture_batch(rng, 1024, MEANS4), m=4,
+                         coreset_rows=128, refine_iters=2, drift_tol=1.5)
+    assert res.rounds == 0
+    stale = np.asarray(res.centers)
+    shifted = MEANS4 + np.asarray([[8.0, 8.0, 0, 0]], np.float32)
+    fired = False
+    for _ in range(3):
+        xb = _mixture_batch(rng, 1024, shifted)
+        res = fit_update(res, xb, m=4, coreset_rows=128, refine_iters=2,
+                        drift_tol=1.5)
+        fired = fired or res.extra["reclustered"]
+    assert fired and res.rounds >= 1
+    # the refresh moved serving mass to the shifted region: the stream
+    # now holds 8 live clusters for k=4 centers, so the absolute cost is
+    # high either way, but the refreshed centers must beat the frozen
+    # pre-shift centers on the new data by a wide margin
+    cost_fresh = float(res.cost(xb))
+    cost_stale = float(centralized_cost(jnp.asarray(xb),
+                                        jnp.asarray(stale)))
+    assert cost_fresh < 0.5 * cost_stale
+    # the escalation upload dwarfs a refine-only update
+    assert max(res.uplink_points) > 10 * min(res.uplink_points)
+
+
+def test_recluster_modes_never_and_always():
+    rng = np.random.default_rng(5)
+    res_n = _bootstrap(rng)
+    shifted = MEANS4 + 8.0
+    for _ in range(3):
+        res_n = fit_update(res_n, _mixture_batch(rng, 512, shifted), m=4,
+                           coreset_rows=128, recluster="never")
+    assert res_n.rounds == 0
+    res_a = _bootstrap(rng)
+    res_a = fit_update(res_a, _mixture_batch(rng, 512, MEANS4), m=4,
+                       coreset_rows=128, recluster="always")
+    assert res_a.rounds == 1 and res_a.extra["reclustered"] is True
+
+
+# -------------------------------------------------------------- serving
+def test_serve_assign_matches_numpy_and_tags_version():
+    rng = np.random.default_rng(6)
+    centers = rng.normal(size=(5, 3)).astype(np.float32)
+    x = rng.normal(size=(1001, 3)).astype(np.float32)   # not batch-aligned
+    snap = CenterSnapshot(centers, version=7)
+    assign, d2, version = serve_assign(snap, x, batch=256)
+    assert version == 7
+    ref = np.linalg.norm(x[:, None] - centers[None], axis=-1) ** 2
+    np.testing.assert_array_equal(assign, ref.argmin(1))
+    np.testing.assert_allclose(d2, ref.min(1), rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError, match="queries"):
+        serve_assign(snap, np.zeros((4, 9), np.float32))
+
+
+def test_snapshot_versions_are_monotone():
+    rng = np.random.default_rng(7)
+    res = _bootstrap(rng)
+    assert snapshot(res).version == 0          # batch fit serves as v0
+    seen = [0]
+    for _ in range(3):
+        res = fit_update(res, _mixture_batch(rng, 512, MEANS4), m=4,
+                         coreset_rows=128)
+        seen.append(snapshot(res).version)
+    assert seen == sorted(seen) and len(set(seen)) == len(seen)
+    assert snapshot(res).centers.shape == (4, 4)
+
+
+# ----------------------------------------------------------- checkpoint
+def test_stream_checkpoint_roundtrip_and_resume(tmp_path):
+    """Save a mid-stream state, restore it cold (no template), and check
+    the restored fork produces bit-identical updates to the original —
+    tree buffers, centers, version, and the PRNG key all survive."""
+    rng = np.random.default_rng(8)
+    res = _bootstrap(rng)
+    for _ in range(3):
+        res = fit_update(res, _mixture_batch(rng, 512, MEANS4), m=4,
+                         coreset_rows=128)
+    state = res.extra["stream"]
+    ck = Checkpointer(str(tmp_path), use_async=False)
+    save_stream(ck, 3, state)
+
+    got = restore_stream(ck)
+    assert got.version == state.version and got.k == state.k
+    assert got.occupied == state.occupied
+    assert got.n_updates == 3 and got.n_seen == state.n_seen
+    assert got.uplink_points == state.uplink_points
+    np.testing.assert_array_equal(got.centers, state.centers)
+    for a, b in zip(got.levels, state.levels):
+        assert (a is None) == (b is None)
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a[0]),
+                                          np.asarray(b[0]))
+
+    # resume: the restored coordinator replays the next update exactly
+    xb = _mixture_batch(rng, 512, MEANS4)
+    res_fork = dataclasses.replace(res, extra={**res.extra, "stream": got})
+    nxt = fit_update(res, xb, coreset_rows=128)
+    nxt_fork = fit_update(res_fork, xb, coreset_rows=128)
+    np.testing.assert_array_equal(nxt.centers, nxt_fork.centers)
+    assert nxt.extra["version"] == nxt_fork.extra["version"]
+
+    empty = Checkpointer(str(tmp_path / "none"), use_async=False)
+    with pytest.raises(FileNotFoundError):
+        restore_stream(empty)
+
+
+# ------------------------------------------------- scenarios/acceptance
+def test_streaming_scenarios_registered():
+    names = set(list_scenarios(tag="paper"))
+    assert {"streaming_drift", "streaming_stationary"} <= names
+    for name in ("streaming_drift", "streaming_stationary"):
+        sc = get_scenario(name)
+        assert sc.stream is not None and sc.stream_policies
+        batches = sc.stream(True)
+        assert len(batches) >= 8
+        assert all(b.ndim == 2 and b.shape[1] == batches[0].shape[1]
+                   for b in batches)
+        modes = {p.mode for p in sc.stream_policies}
+        assert modes >= {"full", "update"}
+
+
+@pytest.fixture(scope="module")
+def stream_rows():
+    eta = dict(eta_override=1024)
+    pols = (
+        StreamPolicy("full_every_step", mode="full", cadence=1,
+                     fit_params=eta),
+        StreamPolicy("update_c1", mode="update", cadence=1,
+                     recluster="auto", drift_tol=1.5, refine_iters=2,
+                     fit_params=eta),
+        StreamPolicy("update_c4", mode="update", cadence=4,
+                     recluster="auto", drift_tol=1.5, refine_iters=2,
+                     fit_params=eta),
+    )
+    drift, _ = drifting_mixture(steps=12, n_per_step=768, k=8, dim=8,
+                                drift=0.04, sigma=0.02, birth_step=6,
+                                seed=53)
+    flat, _ = drifting_mixture(steps=12, n_per_step=768, k=8, dim=8,
+                               drift=0.0, sigma=0.02, seed=59)
+    return {
+        "drift": run_stream_suite(drift, 8, pols, m=8, seed=0),
+        "stationary": run_stream_suite(flat, 8, pols[:2], m=8, seed=0),
+    }
+
+
+@pytest.mark.slow
+def test_acceptance_update_tracks_full_at_fraction_of_uplink(stream_rows):
+    """THE acceptance criterion: on the drifting mixture, ``fit_update``
+    at a fixed cadence stays within 1.1x the cost of a full re-cluster
+    every step while spending <= 25% of its cumulative uplink bytes."""
+    by = {r["policy"]: r for r in stream_rows["drift"]}
+    up = by["update_c1"]
+    assert up["cost_vs_full"] <= 1.1
+    assert up["uplink_frac_of_full"] <= 0.25
+    assert up["reclusters"] >= 1           # the birth at step 6 is caught
+    c4 = by["update_c4"]
+    assert c4["uplink_bytes"] < up["uplink_bytes"]
+    assert c4["cost_vs_full"] <= 1.25
+    # rows carry the scoreboard columns the BENCH upload reads
+    for r in stream_rows["drift"]:
+        for col in ("policy", "mode", "cadence", "staleness_cost",
+                    "final_cost", "uplink_bytes", "bootstrap_uplink_bytes",
+                    "reclusters", "version"):
+            assert col in r, col
+
+
+@pytest.mark.slow
+def test_acceptance_stationary_control_never_reclusters(stream_rows):
+    """Drift trigger fires zero full re-clusters on the stationary
+    control — and tracking costs stay at the full-refit level anyway."""
+    by = {r["policy"]: r for r in stream_rows["stationary"]}
+    up = by["update_c1"]
+    assert up["reclusters"] == 0
+    assert up["cost_vs_full"] <= 1.15
+    assert up["uplink_frac_of_full"] <= 0.25

@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all test-kernels smoke bench-kernels bench scenarios lint autotune stream-demo
+.PHONY: test test-all test-kernels test-mesh smoke bench-kernels bench scenarios lint autotune stream-demo
 
 smoke:           ## quickstart example + one fit() per registered algorithm
 	$(PYTHON) examples/quickstart.py
@@ -17,6 +17,10 @@ test-all:        ## full tier-1 suite, fail-fast (ROADMAP verify command)
 test-kernels:    ## kernel conformance harness: oracle vs both backends
 	REPRO_KERNEL_BACKEND=ref $(PYTHON) -m pytest -q tests/test_kernel_conformance.py
 	REPRO_KERNEL_BACKEND=pallas $(PYTHON) -m pytest -q tests/test_kernel_conformance.py
+
+test-mesh:       ## real-wire mesh collectives on 2 then 8 emulated devices
+	XLA_FLAGS=--xla_force_host_platform_device_count=2 $(PYTHON) -m pytest -q -m mesh
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 $(PYTHON) -m pytest -q -m mesh
 
 bench-kernels:   ## kernel micro-bench + roofline smoke (quick shapes)
 	$(PYTHON) -m benchmarks.run --only kernels --quick

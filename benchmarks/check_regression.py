@@ -1,20 +1,35 @@
-"""Nightly roofline-regression gate (bench.yml).
+"""Nightly regression gates (bench.yml): kernel roofline + wire bytes.
 
-Compares a freshly produced ``results/kernels.json`` against a committed
-baseline and FAILS (exit 1) when any kernel row's measured
-``roofline_fraction`` dropped by more than ``--threshold`` (default 20%):
-the achieved fraction of this device's realizable peaks falling that far
-means a kernel, the tuner, or the dispatch regressed — the fraction is
-hardware-normalized, so the gate survives runner-speed drift far better
-than raw wall time would.
+Roofline gate: compares a freshly produced ``results/kernels.json``
+against a committed baseline and FAILS (exit 1) when any kernel row's
+measured ``roofline_fraction`` dropped by more than ``--threshold``
+(default 20%): the achieved fraction of this device's realizable peaks
+falling that far means a kernel, the tuner, or the dispatch regressed —
+the fraction is hardware-normalized, so the gate survives runner-speed
+drift far better than raw wall time would.
 
-Rows are matched on (kernel, n, k, d); rows present on only one side are
-reported but do not fail the gate (shape sets may evolve). Baseline rows
-without a fraction (pre-autotune schema) are skipped.
+Wire-bytes gate: compares a fresh ``BENCH_scenarios.json`` sweep against
+the committed one and FAILS when any (scenario, algo, condition) row's
+achieved uplink wire bytes grew by more than ``--wire-threshold``
+(default 10%) — a widened collective, a lost compressed path, or a new
+dense pad shows up here as measured bytes, not as a modeled estimate.
+Each row prints its bytes-vs-Ω(m·k) ratio (Zhang et al.,
+arXiv:1507.00026) so drift toward the communication frontier is visible
+in the log even when the gate passes.
+
+Rows are matched on (kernel, n, k, d) / (scenario, algo, condition);
+rows present on only one side are reported but do not fail the gate
+(shape and scenario sets may evolve). Baseline rows without the gated
+field (pre-autotune / pre-wire schema) are skipped.
 
 Usage:
     python -m benchmarks.check_regression --current results/kernels.json \
         --baseline <committed kernels.json> [--threshold 0.20]
+    python -m benchmarks.check_regression \
+        --scenarios-current results/BENCH_scenarios.json \
+        --scenarios-baseline BENCH_scenarios.json [--wire-threshold 0.10]
+
+Either pair (or both) may be given; at least one is required.
 """
 from __future__ import annotations
 
@@ -24,6 +39,7 @@ import pathlib
 import sys
 
 DEFAULT_THRESHOLD = 0.20
+DEFAULT_WIRE_THRESHOLD = 0.10
 
 
 def _rows(path: pathlib.Path) -> dict:
@@ -61,14 +77,78 @@ def check(current: pathlib.Path, baseline: pathlib.Path,
     return 0
 
 
+def _scenario_rows(path: pathlib.Path) -> dict:
+    payload = json.loads(path.read_text())
+    return {(r["scenario"], r["algo"], r["condition"]): r
+            for r in payload.get("rows", [])
+            if not r.get("skipped")}
+
+
+def _wire_bytes(row: dict):
+    """Achieved wire bytes of a sweep row, falling back to the modeled
+    uplink bytes for baselines that predate the WireTally schema."""
+    v = row.get("wire_bytes")
+    return row.get("uplink_bytes") if v is None else v
+
+
+def check_scenarios(current: pathlib.Path, baseline: pathlib.Path,
+                    threshold: float = DEFAULT_WIRE_THRESHOLD) -> int:
+    cur, base = _scenario_rows(current), _scenario_rows(baseline)
+    failures = []
+    for key, b in sorted(base.items(), key=str):
+        c = cur.get(key)
+        bw = _wire_bytes(b)
+        if c is None or not bw:
+            print(f"skip {key}: "
+                  f"{'missing in current' if c is None else 'no baseline wire bytes'}")
+            continue
+        cw = _wire_bytes(c) or 0
+        growth = (cw - bw) / bw
+        ratio = c.get("bytes_vs_omega_mk")
+        ratio_s = "—" if ratio is None else f"{ratio:.1f}x"
+        status = "FAIL" if growth > threshold else "ok"
+        print(f"{status} {key}: wire bytes {bw} -> {cw} ({growth:+.1%}), "
+              f"{ratio_s} omega(mk)")
+        if growth > threshold:
+            failures.append(key)
+    for key in sorted(set(cur) - set(base), key=str):
+        print(f"new  {key}: wire bytes {_wire_bytes(cur[key])}")
+    if failures:
+        print(f"\n{len(failures)} row(s) grew achieved wire bytes by more "
+              f"than {threshold:.0%}")
+        return 1
+    print("\nno wire-byte regressions")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="fail when kernel roofline_fraction regresses")
-    ap.add_argument("--current", required=True, type=pathlib.Path)
-    ap.add_argument("--baseline", required=True, type=pathlib.Path)
+        description="fail when kernel roofline_fraction regresses or "
+                    "scenario wire bytes grow")
+    ap.add_argument("--current", type=pathlib.Path)
+    ap.add_argument("--baseline", type=pathlib.Path)
     ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
+    ap.add_argument("--scenarios-current", type=pathlib.Path)
+    ap.add_argument("--scenarios-baseline", type=pathlib.Path)
+    ap.add_argument("--wire-threshold", type=float,
+                    default=DEFAULT_WIRE_THRESHOLD)
     args = ap.parse_args(argv)
-    return check(args.current, args.baseline, args.threshold)
+    if bool(args.current) != bool(args.baseline):
+        ap.error("--current and --baseline must be given together")
+    if bool(args.scenarios_current) != bool(args.scenarios_baseline):
+        ap.error("--scenarios-current and --scenarios-baseline must be "
+                 "given together")
+    if not args.current and not args.scenarios_current:
+        ap.error("nothing to check: give --current/--baseline and/or "
+                 "--scenarios-current/--scenarios-baseline")
+    rc = 0
+    if args.current:
+        rc |= check(args.current, args.baseline, args.threshold)
+    if args.scenarios_current:
+        rc |= check_scenarios(args.scenarios_current,
+                              args.scenarios_baseline,
+                              args.wire_threshold)
+    return rc
 
 
 if __name__ == "__main__":

@@ -33,6 +33,22 @@ def _uplink_dtype(backend) -> str:
     return getattr(backend, "uplink_dtype", "float32")
 
 
+def _uplink_wire(backend) -> str:
+    from repro.api.backends import check_uplink_wire
+    return check_uplink_wire(getattr(backend, "uplink_wire", "auto"),
+                             _uplink_dtype(backend))
+
+
+def _wire_fields(raw, rounds: int) -> dict:
+    """Pick the core result's measured WireTally arrays into the
+    ClusterResult, trimmed to the realized round count."""
+    wp = np.asarray(getattr(raw, "wire_payload", ()), np.int64)
+    wm = np.asarray(getattr(raw, "wire_meta", ()), np.int64)
+    if wp.size == 0:
+        return {}
+    return {"wire_bytes": wp[:rounds], "wire_meta_bytes": wm[:rounds]}
+
+
 def _reject_unknown(algo: str, params: dict, allowed: set):
     unknown = sorted(set(params) - allowed)
     if unknown:
@@ -60,6 +76,7 @@ def fit_soccer(x_parts, k: int, *, backend, key=None, w=None, alive=None,
         uplink_bytes=uplink_bytes(up, d, dtype=_uplink_dtype(backend)),
         n_hist=res.n_hist[: res.rounds + 1],
         v_hist=res.v_hist[: res.rounds],
+        **_wire_fields(res, res.rounds + 1),
         extra={"const": res.const, "state": res.state, "raw": res})
 
 
@@ -90,6 +107,7 @@ def fit_kmeans_parallel(x_parts, k: int, *, backend, key=None, w=None,
         centers=res.centers, k=k, algo="kmeans_parallel",
         backend=backend.name, rounds=res.rounds, uplink_points=up,
         uplink_bytes=uplink_bytes(up, d, dtype=_uplink_dtype(backend)),
+        **_wire_fields(res, len(up)),
         extra={"phi_hist": res.phi_hist, "oversampled": res.oversampled,
                "raw": res})
 
@@ -111,6 +129,7 @@ def fit_eim11(x_parts, k: int, *, backend, key=None, w=None, alive=None,
         uplink_bytes=uplink_bytes(res.uplink, d,
                                   dtype=_uplink_dtype(backend)),
         n_hist=res.n_hist,
+        **_wire_fields(res, len(res.uplink)),
         extra={"broadcast_points": res.broadcast_points, "raw": res})
 
 
@@ -128,24 +147,36 @@ def _fit_central(method: str, x_parts, k, backend, key, w, alive, seed,
     w_dev = backend.put(jnp.asarray(w_np), "machine")
     key = jax.random.PRNGKey(seed) if key is None else key
 
+    wire = _uplink_wire(backend)
+
     def central(kk, xp, wp):
         from repro.api.backends import quantize_uplink
-        xa = quantize_uplink(comm.all_machines(xp).reshape(-1, d),
-                             _uplink_dtype(backend))
-        wa = comm.all_machines(wp).reshape(-1)
+        if wire == "codes":
+            # int8 codes + per-machine qparams on the wire, dequantized
+            # on arrival (1 byte/coordinate actually moves)
+            xa = comm.concat_machines_compressed(xp)
+        else:
+            xa = quantize_uplink(comm.concat_machines(xp),
+                                 _uplink_dtype(backend))
+        wa = comm.concat_machines(wp, meta=True)
         if method == "minibatch":
             return minibatch_kmeans(kk, xa, wa, k, **bb_kw)
         return kmeans(kk, xa, wa, k, **bb_kw)
 
+    from repro.core.comm import WireTally, wire_tally
     fn = backend.compile(central, ("rep", "machine", "machine"),
                          ("rep", "rep"))
-    centers, cost = fn(key, x, w_dev)
+    t = WireTally()
+    with wire_tally(t):
+        centers, cost = fn(key, x, w_dev)
     n_up = int(np.sum(w_np > 0))
     up = np.asarray([n_up], np.int64)
     return ClusterResult(
         centers=np.asarray(centers), k=k, algo=method,
         backend=backend.name, rounds=1, uplink_points=up,
         uplink_bytes=uplink_bytes(up, d, dtype=_uplink_dtype(backend)),
+        wire_bytes=np.asarray([t.payload], np.int64),
+        wire_meta_bytes=np.asarray([t.meta], np.int64),
         extra={"blackbox_cost": float(cost)})
 
 

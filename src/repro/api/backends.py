@@ -54,6 +54,38 @@ def check_uplink_dtype(dtype) -> str:
     return name
 
 
+# Wire transport of the (quantized) upload payload — the uplink_wire knob:
+#   "values": payloads move at their storage width (int8 payloads move as
+#       their f32 reconstruction — compression ends at accounting, the
+#       pre-PR-8 behavior);
+#   "codes":  int8 payloads move as 1-byte codes + one per-machine affine
+#       (scale, zero_point) pair and are dequantized on arrival (the
+#       *_compressed gathers in core/comm) — same reconstructed values,
+#       1/4 the achieved wire bytes;
+#   "auto":   "codes" whenever uplink_dtype="int8", else "values".
+UPLINK_WIRES = ("auto", "codes", "values")
+
+
+def check_uplink_wire(wire, dtype: str = "float32") -> str:
+    """Validate and resolve an uplink_wire knob against the uplink dtype.
+
+    Returns the resolved transport ("codes" | "values"); "auto" picks
+    "codes" exactly when the payload is int8 (float payloads are already
+    at wire width — there is nothing further to encode).
+    """
+    if wire not in UPLINK_WIRES:
+        raise ValueError(
+            f"unsupported uplink_wire {wire!r}: expected one of "
+            f"{', '.join(UPLINK_WIRES)}")
+    if wire == "auto":
+        return "codes" if dtype == "int8" else "values"
+    if wire == "codes" and dtype != "int8":
+        raise ValueError(
+            f"uplink_wire='codes' ships int8 codes + per-machine qparams "
+            f"and needs uplink_dtype='int8', got uplink_dtype={dtype!r}")
+    return wire
+
+
 def _shard_map(fn, mesh: Mesh, in_specs, out_specs):
     """Version-compat shard_map (jax.shard_map vs jax.experimental)."""
     if hasattr(jax, "shard_map"):
@@ -81,7 +113,9 @@ class Backend(Protocol):
     ``UPLINK_DTYPES``) — drivers read it with ``getattr(backend,
     "uplink_dtype", "float32")``, quantize upload payloads with
     ``quantize_uplink`` and account ``ClusterResult.uplink_bytes`` at
-    that width.
+    that width — and ``uplink_wire`` (one of ``UPLINK_WIRES``), read via
+    ``check_uplink_wire(getattr(backend, "uplink_wire", "auto"), dtype)``
+    to pick the codes vs values transport of ``core.comm``.
     """
     name: str
 
@@ -107,6 +141,7 @@ class VirtualBackend:
     """Single-device execution: machine axis is a plain array axis."""
     name: str = "virtual"
     uplink_dtype: str = "float32"
+    uplink_wire: str = "auto"
 
     def make_comm(self, m: int) -> VirtualCluster:
         return VirtualCluster(m)
@@ -130,6 +165,7 @@ class CommBackend:
     comm: Any
     name: str = "virtual"
     uplink_dtype: str = "float32"
+    uplink_wire: str = "auto"
 
     def make_comm(self, m: int):
         return self.comm
@@ -150,6 +186,7 @@ class MeshBackend:
     axis_names: Optional[Tuple[str, ...]] = None
     name: str = "mesh"
     uplink_dtype: str = "float32"
+    uplink_wire: str = "auto"
 
     @property
     def machine_axes(self) -> Tuple[str, ...]:
@@ -170,6 +207,17 @@ class MeshBackend:
         return jax.tree.map(self._spec, marks)
 
     def put(self, tree, marks):
+        if jax.process_count() > 1:
+            # multi-host (repro.launch): device_put cannot build a global
+            # array from host-local data — each process contributes the
+            # machine rows of ITS devices (MACHINE leaves arrive as the
+            # process-local (m // process_count, ...) slab; REPLICATED
+            # leaves arrive whole on every process).
+            def _place(leaf, mk):
+                sharding = NamedSharding(self.mesh, self._spec(mk))
+                return jax.make_array_from_process_local_data(
+                    sharding, np.asarray(leaf))
+            return jax.tree.map(_place, tree, marks)
         return jax.tree.map(
             lambda leaf, mk: jax.device_put(
                 leaf, NamedSharding(self.mesh, self._spec(mk))),
@@ -181,37 +229,60 @@ class MeshBackend:
         return jax.jit(mapped, donate_argnums=donate)
 
 
-def resolve_backend(backend, m: int, uplink_dtype=None) -> Backend:
+def _replace_knob(backend, field: str, value: str):
+    if not (dataclasses.is_dataclass(backend) and any(
+            f.name == field for f in dataclasses.fields(backend))):
+        raise ValueError(
+            f"backend {type(backend).__name__} does not carry an "
+            f"{field} field; construct it with {field}={value!r} instead "
+            f"of passing the knob to fit()")
+    return dataclasses.replace(backend, **{field: value})
+
+
+def resolve_backend(backend, m: int, uplink_dtype=None,
+                    uplink_wire=None) -> Backend:
     """Accepts a Backend, a Mesh, or "virtual" | "mesh" | "auto".
 
     "auto" picks the mesh backend when the host has at least ``m``
     addressable devices (one machine per device), else the virtual one.
-    ``uplink_dtype`` (if given) sets the upload precision on the
-    resolved backend; already-constructed Backend instances are rebuilt
-    via ``dataclasses.replace`` when it conflicts with theirs.
+    ``uplink_dtype``/``uplink_wire`` (if given) set the upload precision
+    and wire transport on the resolved backend; already-constructed
+    Backend instances are rebuilt via ``dataclasses.replace`` when a
+    knob conflicts with theirs. The final (dtype, wire) pair is
+    validated — requesting the codes wire for a float payload raises
+    here, not rounds into the run.
     """
     ud = None if uplink_dtype is None else check_uplink_dtype(uplink_dtype)
+    uw = None
+    if uplink_wire is not None:
+        if uplink_wire not in UPLINK_WIRES:
+            raise ValueError(
+                f"unsupported uplink_wire {uplink_wire!r}: expected one "
+                f"of {', '.join(UPLINK_WIRES)}")
+        uw = uplink_wire
+
+    def _check(bk):
+        check_uplink_wire(getattr(bk, "uplink_wire", "auto"),
+                          getattr(bk, "uplink_dtype", "float32"))
+        return bk
+
     if backend is None:
         backend = "virtual"
     if isinstance(backend, Mesh):
-        return MeshBackend(backend, uplink_dtype=ud or "float32")
+        return _check(MeshBackend(backend, uplink_dtype=ud or "float32",
+                                  uplink_wire=uw or "auto"))
     if not isinstance(backend, str):
         # already a Backend (duck-typed)
         if ud and getattr(backend, "uplink_dtype", "float32") != ud:
-            if not (dataclasses.is_dataclass(backend) and any(
-                    f.name == "uplink_dtype"
-                    for f in dataclasses.fields(backend))):
-                raise ValueError(
-                    f"backend {type(backend).__name__} does not carry an "
-                    f"uplink_dtype field; construct it with "
-                    f"uplink_dtype={ud!r} instead of passing the knob to "
-                    f"fit()")
-            return dataclasses.replace(backend, uplink_dtype=ud)
-        return backend
+            backend = _replace_knob(backend, "uplink_dtype", ud)
+        if uw and getattr(backend, "uplink_wire", "auto") != uw:
+            backend = _replace_knob(backend, "uplink_wire", uw)
+        return _check(backend)
     if backend == "auto":
         backend = "mesh" if (m > 1 and jax.device_count() >= m) else "virtual"
     if backend == "virtual":
-        return VirtualBackend(uplink_dtype=ud or "float32")
+        return _check(VirtualBackend(uplink_dtype=ud or "float32",
+                                     uplink_wire=uw or "auto"))
     if backend == "mesh":
         if jax.device_count() < m:
             raise ValueError(
@@ -219,8 +290,9 @@ def resolve_backend(backend, m: int, uplink_dtype=None) -> Backend:
                 f"got {jax.device_count()}; use backend='virtual' or fewer "
                 f"machines")
         devs = np.asarray(jax.devices()[:m]).reshape(m)
-        return MeshBackend(Mesh(devs, ("machines",)),
-                           uplink_dtype=ud or "float32")
+        return _check(MeshBackend(Mesh(devs, ("machines",)),
+                                  uplink_dtype=ud or "float32",
+                                  uplink_wire=uw or "auto"))
     raise ValueError(
         f"unknown backend {backend!r}: expected 'virtual', 'mesh', 'auto', "
         f"a jax Mesh, or a Backend instance")

@@ -62,8 +62,8 @@ def _mask_failed_machines(parts, w, alive, ids):
 def fit(x, k: int, algo: str = "soccer", backend="auto", *,
         m: Optional[int] = None, w=None, key: Optional[jax.Array] = None,
         seed: int = 0, shuffle: bool = True, shard_policy=None,
-        uplink_dtype=None, uplink_mode=None, failure_plan=None,
-        **algo_params) -> ClusterResult:
+        uplink_dtype=None, uplink_wire=None, uplink_mode=None,
+        failure_plan=None, **algo_params) -> ClusterResult:
     """Cluster ``x`` into ``k`` groups with any registered algorithm.
 
     Args:
@@ -87,6 +87,14 @@ def fit(x, k: int, algo: str = "soccer", backend="auto", *,
         default, "bfloat16", "float16", "int8" — the last via the affine
         quantizer in ``repro.ft.compression``); uploads are quantized
         and ``uplink_bytes`` accounted at this width.
+      uplink_wire: payload *transport* — "codes" gathers 1-byte int8
+        codes plus per-machine affine qparams and dequantizes on
+        arrival (the mesh collective actually moves 1 byte/coordinate,
+        so measured ``wire_bytes`` matches the int8 model); "values"
+        moves the reconstructed storage-width values (honest: int8
+        payloads travel as f32 and ``wire_bytes`` shows 4x the model);
+        "auto" (default) picks "codes" iff ``uplink_dtype="int8"``.
+        "codes" with a non-int8 dtype raises.
       uplink_mode: "points" (default) or "coreset" — "coreset" routes
         the per-round upload through a machine-side sensitivity coreset
         (``repro.coresets``), shrinking uplink rows independently of the
@@ -124,7 +132,8 @@ def fit(x, k: int, algo: str = "soccer", backend="auto", *,
         "shuffle" if shuffle else "contiguous")
     parts, w_parts, alive_parts = _as_parts(x, w, m, seed, policy)
 
-    bk = resolve_backend(backend, m, uplink_dtype=uplink_dtype)
+    bk = resolve_backend(backend, m, uplink_dtype=uplink_dtype,
+                         uplink_wire=uplink_wire)
     driver = get_algorithm(algo)
 
     if uplink_mode is not None:
@@ -165,6 +174,8 @@ def fit(x, k: int, algo: str = "soccer", backend="auto", *,
         res.params["shard_policy"] = getattr(policy, "__name__", policy)
     if uplink_dtype is not None:
         res.params["uplink_dtype"] = bk.uplink_dtype
+    if uplink_wire is not None:
+        res.params["uplink_wire"] = bk.uplink_wire
     if failure_plan is not None:
         res.params["failure_plan"] = failure_plan
         res.params.pop("on_round", None)

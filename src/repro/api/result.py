@@ -17,13 +17,29 @@ def dtype_itemsize(dtype) -> int:
 
 
 def uplink_bytes(points, d: int, dtype=np.float32) -> np.ndarray:
-    """Communication volume of ``points`` uploaded d-dim rows, in bytes.
+    """MODELED communication volume of ``points`` uploaded d-dim rows, in
+    bytes — what the uplink_dtype contract charges (1 byte/coordinate for
+    int8, regardless of transport).
 
     Dtype-aware so the paper's uplink comparison stays meaningful for
     reduced-precision uploads (``fit(..., uplink_dtype="bfloat16")``).
+    The MEASURED counterpart is ``ClusterResult.wire_bytes`` (recorded at
+    the traced collectives' itemsizes by ``core.comm.WireTally``); the
+    two agree exactly on honest wires (``uplink_wire="codes"`` for int8)
+    and diverge when the transport is wider than the accounting
+    (``uplink_wire="values"`` moves int8 payloads as f32).
     """
     pts = np.asarray(points, np.int64)
     return pts * int(d) * dtype_itemsize(dtype)
+
+
+def omega_mk_bytes(m: int, k: int, d: int, itemsize: int = 4) -> int:
+    """The Ω(m·k) communication lower-bound frontier of Zhang et al.
+    (arXiv:1507.00026), in bytes: any coordinator-model protocol that
+    outputs k centers over m machines moves Ω(m·k) points — m·k·d
+    coordinates at ``itemsize`` bytes. Scenario reports show achieved
+    wire bytes against this frontier per algorithm."""
+    return int(m) * int(k) * int(d) * int(itemsize)
 
 
 @dataclasses.dataclass
@@ -44,6 +60,13 @@ class ClusterResult:
     uplink_bytes: np.ndarray            # (R,) same in bytes (dtype-aware)
     n_hist: Optional[np.ndarray] = None   # live-point counts per round
     v_hist: Optional[np.ndarray] = None   # removal thresholds per round
+    # ACHIEVED wire volume per round, measured at the traced collectives'
+    # payload itemsizes (core.comm.WireTally) — not the uplink_dtype
+    # model above. wire_bytes is the point-payload channel; wire_meta_bytes
+    # the per-row weights / counts / qparams sideband. None for drivers
+    # that predate the wire accounting.
+    wire_bytes: Optional[np.ndarray] = None
+    wire_meta_bytes: Optional[np.ndarray] = None
     wall_time_s: float = 0.0
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -55,6 +78,16 @@ class ClusterResult:
     @property
     def uplink_bytes_total(self) -> int:
         return int(np.sum(self.uplink_bytes))
+
+    @property
+    def wire_bytes_total(self) -> Optional[int]:
+        """Total measured wire bytes (payload + metadata sideband), or
+        None when the driver did not record a tally."""
+        if self.wire_bytes is None:
+            return None
+        meta = 0 if self.wire_meta_bytes is None else np.sum(
+            self.wire_meta_bytes)
+        return int(np.sum(self.wire_bytes) + meta)
 
     def cost(self, x, w=None) -> float:
         """Centralized k-means cost of ``self.centers`` on ``x``.

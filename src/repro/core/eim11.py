@@ -39,6 +39,11 @@ class EIM11Result:
     uplink: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros((0,), np.int64))
     # points uploaded per round (two samples each) + the finalize gather
+    wire_payload: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int64))
+    wire_meta: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int64))
+    # achieved wire bytes per round (core.comm.WireTally accounting)
 
 
 def _weighted_quantile(d2: jax.Array, w: jax.Array, q: float) -> jax.Array:
@@ -81,6 +86,9 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
     alive_dev = backend.put(alive0, "machine")
     cap = min(p, s)
     uplink_dtype = getattr(backend, "uplink_dtype", "float32")
+    from repro.api.backends import check_uplink_wire
+    uplink_wire = check_uplink_wire(
+        getattr(backend, "uplink_wire", "auto"), uplink_dtype)
     rows = max_rounds * s
     key = jax.random.PRNGKey(seed) if key is None else key
 
@@ -89,9 +97,11 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
         n_vec = comm.all_machines(n_local)
         k1, k2 = jax.random.split(kk)
         s1, _, r1 = draw_global_sample(comm, k1, x, w, alive, n_vec, s,
-                                       cap, upload_dtype=uplink_dtype)
+                                       cap, upload_dtype=uplink_dtype,
+                                       wire=uplink_wire)
         s2, w2, r2 = draw_global_sample(comm, k2, x, w, alive, n_vec, s,
-                                        cap, upload_dtype=uplink_dtype)
+                                        cap, upload_dtype=uplink_dtype,
+                                        wire=uplink_wire)
         # coordinator adds the whole first sample to the clustering (the
         # clustering buffer is broadcast DOWNlink, so it stays f32; only
         # the uplink payload s1/s2 may arrive narrowed)
@@ -114,7 +124,8 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
         kf1, kf2 = jax.random.split(kk)
         v_pts, v_w, real = draw_global_sample(comm, kf1, x, w, alive, n_vec,
                                               s, cap,
-                                              upload_dtype=uplink_dtype)
+                                              upload_dtype=uplink_dtype,
+                                              wire=uplink_wire)
         c_fin, _ = kmeans(kf2, v_pts, v_w, k)
         centers = jax.lax.dynamic_update_slice(centers, c_fin, (base, 0))
         row_ids = jnp.arange(rows)
@@ -140,10 +151,13 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
     rounds = 0
     broadcast = 0
     n_rem = n
+    from repro.core.comm import WireTally, wire_tally
+    t_round, t_fin = WireTally(), WireTally()
     while n_rem > s and rounds < max_rounds:
         kk, key = jax.random.split(key)
-        alive, centers, valid, n_rem_a, up = step(
-            kk, x, w, alive, centers, valid, jnp.int32(rounds * s))
+        with wire_tally(t_round):
+            alive, centers, valid, n_rem_a, up = step(
+                kk, x, w, alive, centers, valid, jnp.int32(rounds * s))
         n_rem = int(n_rem_a)
         rounds += 1
         broadcast += int(np.asarray(valid).sum())  # coordinator re-broadcasts C
@@ -153,9 +167,19 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
     # final: survivors -> coordinator -> k-means; then weighted reduction
     kf, key = jax.random.split(key)
     base = min(rounds * s, rows - k)
-    final, real = finalize(kf, x, w, alive, centers, valid, jnp.int32(base))
+    with wire_tally(t_fin):
+        final, real = finalize(kf, x, w, alive, centers, valid,
+                               jnp.int32(base))
     uplink.append(int(real))
+    up_arr = np.asarray(uplink, np.int64)
+    wire_payload = np.concatenate(
+        [t_round.bytes_at(up_arr[:rounds]),
+         t_fin.bytes_at(up_arr[rounds:])])
+    wire_meta = np.concatenate(
+        [t_round.meta_bytes_at(up_arr[:rounds]),
+         t_fin.meta_bytes_at(up_arr[rounds:])])
     return EIM11Result(centers=np.asarray(final), rounds=rounds,
                        broadcast_points=broadcast,
                        n_hist=np.asarray(n_hist),
-                       uplink=np.asarray(uplink, np.int64))
+                       uplink=up_arr, wire_payload=wire_payload,
+                       wire_meta=wire_meta)

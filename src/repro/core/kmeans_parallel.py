@@ -48,6 +48,13 @@ class KMeansParallelResult:
     rounds: int
     phi_hist: np.ndarray         # cost after each round
     selected_hist: np.ndarray    # points added per round
+    wire_payload: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int64))
+    wire_meta: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int64))
+    # achieved wire bytes per round — the dense rank-positioned scatter
+    # ships its full (rows, d+1) buffer every round, so the pad is
+    # measured honestly (contrast the ragged sampling gathers)
 
 
 def _one_round(comm, l: float, cap: int, upload_dtype: str,
@@ -141,22 +148,36 @@ def run_kmeans_parallel(x_parts: jax.Array, k: int, rounds: int, *,
         lambda x, w, c, v: assignment_counts(comm, x, w, c, v),
         ("machine", "machine", "rep", "rep"), "rep")
 
+    from repro.core.comm import WireTally, wire_tally
+    t_seed, t_body, t_counts = WireTally(), WireTally(), WireTally()
     k0, key = jax.random.split(key)
-    centers, valid = seed_fn(k0, x, w)
+    with wire_tally(t_seed):
+        centers, valid = seed_fn(k0, x, w)
     round_keys = jax.random.split(key, rounds + 1)
     key = round_keys[0]
     bases = jnp.int32(1) + jnp.arange(rounds, dtype=jnp.int32) * cap
-    centers, valid, phis, nsels = rounds_fn(round_keys[1:], bases, x, w,
-                                            centers, valid)
+    with wire_tally(t_body):    # scan body traces ONCE -> one round's bytes
+        centers, valid, phis, nsels = rounds_fn(round_keys[1:], bases, x, w,
+                                                centers, valid)
     phi_hist = [float(p) for p in phis]
     sel_hist = [int(s) for s in nsels]
 
-    counts = counts_fn(x, w, centers, valid)
+    with wire_tally(t_counts):
+        counts = counts_fn(x, w, centers, valid)
     kf, key = jax.random.split(key)
     final = reduce_to_k(kf, centers, counts * valid, k, lloyd_iters)
 
+    # per-round achieved bytes: the scan body's (constant) traffic each
+    # round; the seeding choice joins round 0, the weighing pass the last
+    wire_payload = np.full((max(rounds, 1),), t_body.payload, np.int64)
+    wire_meta = np.full((max(rounds, 1),), t_body.meta, np.int64)
+    wire_payload[0] += t_seed.payload
+    wire_meta[0] += t_seed.meta
+    wire_payload[-1] += t_counts.payload
+    wire_meta[-1] += t_counts.meta
     return KMeansParallelResult(
         centers=np.asarray(final),
         oversampled=np.asarray(centers)[np.asarray(valid)],
         rounds=rounds, phi_hist=np.asarray(phi_hist),
-        selected_hist=np.asarray(sel_hist))
+        selected_hist=np.asarray(sel_hist),
+        wire_payload=wire_payload, wire_meta=wire_meta)

@@ -9,11 +9,14 @@ same, jit-compatibly:
    (deterministic, replicated on every machine).
 2. per-machine Gumbel top-k draws ``c_j`` live points uniformly without
    replacement (static cap, dynamic count).
-3. ``scatter_gather`` — every machine writes its draw into its slice
-   ``[offset_j, offset_j + c_j)`` of a global ``(rows, d)`` buffer and one
-   ``psum`` materializes the replicated sample. Payload is exactly the
-   paper's communication bound (η·d per sample set) with **no padding
-   waste under arbitrary machine imbalance**.
+3. ``comm.gather_ragged`` — the length-prefixed ragged upload: machine j
+   contributes exactly its ``c_j`` drawn rows, landing at offset
+   ``sum(c[:j])`` of the global ``(rows, d)`` buffer. Payload is exactly
+   the paper's communication bound (η·d per sample set) with **no
+   padding waste under arbitrary machine imbalance** and no dense
+   per-machine scatter buffer on the wire (``scatter_gather`` below is
+   the legacy dense realization, kept for the rank-positioned scatters
+   of k-means‖).
 
 Sampled points carry Horvitz–Thompson importance weights ``w_i · n_j/c_j``
 so every downstream estimator (black-box clustering, truncated cost)
@@ -134,6 +137,7 @@ def scatter_at(comm, values: jax.Array, pos: jax.Array, take: jax.Array,
     Returns:
       (rows, d) replicated buffer; untouched slots are exactly zero.
     """
+    from repro.core.comm import record_wire, static_nbytes
     pos = jnp.where(take, pos, rows)  # out-of-range -> dropped by scatter
 
     def _one(vals, p):
@@ -142,7 +146,11 @@ def scatter_at(comm, values: jax.Array, pos: jax.Array, take: jax.Array,
 
     masked = values * take[..., None].astype(values.dtype)
     local = jax.vmap(_one)(masked, pos)            # (local_m, rows, d)
-    return comm.psum(local)
+    # the dense (rows, d) per-machine buffers ARE this path's wire — the
+    # pad rides along; record it honestly (the ragged gathers in
+    # repro.core.comm are the padless alternative)
+    record_wire(payload=static_nbytes(local) * (comm.m // comm.local_m))
+    return comm._reduce(local)
 
 
 def scatter_gather(comm, values: jax.Array, take: jax.Array,
@@ -166,7 +174,8 @@ def scatter_gather(comm, values: jax.Array, take: jax.Array,
 
 def draw_global_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
                        alive: jax.Array, n_vec_resp: jax.Array,
-                       total: int, cap: int, upload_dtype: str = "float32"):
+                       total: int, cap: int, upload_dtype: str = "float32",
+                       wire: str = "values"):
     """Exact-size global uniform sample with HT weights.
 
     Args:
@@ -174,8 +183,19 @@ def draw_global_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
       n_vec_resp: (m,) live counts of *responding* machines (0 = skipped).
       total: global sample size (static, e.g. η); cap: per-machine buffer.
       upload_dtype: machine->coordinator payload precision; non-f32 rounds
-        the point coordinates before the scatter "upload" (HT weights ride
+        the point coordinates before the ragged "upload" (HT weights ride
         the metadata channel at full precision, like the count vector).
+      wire: transport of the quantized payload (see ``api.backends.
+        UPLINK_WIRES``). ``"values"`` gathers at the storage width (int8
+        payloads move as their f32 reconstruction — compression ends at
+        accounting); ``"codes"`` (int8 only) ships 1-byte codes + one
+        per-machine qparams pair and dequantizes on arrival. Both
+        reconstruct the SAME values — the wire changes achieved bytes,
+        never the statistics.
+
+    The upload is ``comm.gather_ragged``: machine j contributes exactly
+    its ``c_j`` drawn rows (length-prefixed offsets, no dense (total, d)
+    per-machine pad; dead/skipped machines contribute zero rows).
 
     Returns:
       pts (total, d) STORED in ``upload_dtype`` (the clustering kernels
@@ -185,34 +205,32 @@ def draw_global_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
     """
     ids = comm.machine_ids()
     c_vec = apportion(n_vec_resp, total)
-    offs = exclusive_cumsum(c_vec)
-    my_c, my_off = c_vec[ids], offs[ids]
+    my_c = c_vec[ids]
     keys = jax.vmap(jax.random.fold_in, (None, 0))(key, ids)
     idx, take = jax.vmap(sample_local, (0, 0, 0, None))(keys, alive, my_c, cap)
     pts = jnp.take_along_axis(x, idx[..., None], axis=1)
     # buffer rows beyond the draw (take=False) are never uploaded — the
-    # scatter masks them — so overwrite them with row 0 before
+    # ragged gather drops them — so overwrite them with row 0 before
     # quantization: an extreme never-uploaded point must not widen the
     # int8 code book the real payload is encoded with
-    pts = quantize_uplink(jnp.where(take[..., None], pts, pts[:, :1]),
-                          upload_dtype)
+    pts = jnp.where(take[..., None], pts, pts[:, :1])
+    if wire == "codes":
+        out = comm.gather_ragged_compressed(pts, c_vec, total)
+        store = uplink_storage_dtype(upload_dtype)
+        if store != "float32":
+            out = out.astype(jnp.dtype(store))
+    else:
+        out = comm.gather_ragged(quantize_uplink(pts, upload_dtype),
+                                 c_vec, total)
     w_pt = jnp.take_along_axis(w, idx, axis=1)
     n_local = jnp.sum(alive, axis=1).astype(jnp.float32)
     ht = n_local / jnp.maximum(my_c.astype(jnp.float32), 1.0)
-    vals = jnp.concatenate([pts, (w_pt * ht[:, None])[..., None]], axis=-1)
-    buf = scatter_gather(comm, vals, take, my_off, total)
-    out = buf[:, :-1]
-    store = uplink_storage_dtype(upload_dtype)
-    if store != "float32":
-        # the scatter channel is jointly f32 (points + weight column);
-        # re-narrowing is exact — the values were already rounded above
-        # (int8 payloads stay f32: they are already the dequantized grid)
-        out = out.astype(jnp.dtype(store))
-    return out, buf[:, -1], jnp.sum(c_vec)
+    wts = comm.gather_ragged(w_pt * ht[:, None], c_vec, total, meta=True)
+    return out, wts, jnp.sum(c_vec)
 
 
 def gather_weighted(comm, pts: jax.Array, wts: jax.Array,
-                    upload_dtype: str = "float32"
+                    upload_dtype: str = "float32", wire: str = "values"
                     ) -> Tuple[jax.Array, jax.Array]:
     """Fixed-width weighted gather: per-machine summary blocks -> one
     replicated weighted point set.
@@ -228,14 +246,19 @@ def gather_weighted(comm, pts: jax.Array, wts: jax.Array,
       upload_dtype: machine->coordinator payload precision; the points
         are quantized machine-side (the weights ride the metadata channel
         at full precision, like the HT weights).
+      wire: "values" (blocks move at storage width) or "codes" (int8
+        only: 1-byte codes + per-machine qparams through the collective,
+        dequantized on arrival — same values, 1/4 the achieved bytes).
 
     Returns:
       ((m*t, d) points in the uplink storage dtype, (m*t,) f32 weights),
       both replicated.
     """
-    pts = quantize_uplink(pts, upload_dtype)
-    return (comm.concat_machines(pts),
-            comm.concat_machines(wts.astype(jnp.float32)))
+    if wire == "codes":
+        g_pts = comm.concat_machines_compressed(pts)
+    else:
+        g_pts = comm.concat_machines(quantize_uplink(pts, upload_dtype))
+    return g_pts, comm.concat_machines(wts.astype(jnp.float32), meta=True)
 
 
 def global_weighted_choice(key: jax.Array, comm, weights: jax.Array,

@@ -27,6 +27,7 @@ import numpy as np
 from jax import lax
 
 from repro.configs.soccer_paper import SoccerParams
+from repro.core.comm import WireTally, wire_tally
 from repro.core.kmeans import kmeans
 from repro.core.minibatch import minibatch_kmeans
 from repro.core.sampling import draw_global_sample
@@ -61,6 +62,11 @@ class SoccerConstants:
     straggler_rate: float = 0.0
     uplink_dtype: str = "float32"       # machine->coordinator payload
                                         # precision (see api.backends)
+    uplink_wire: str = "values"         # resolved wire transport:
+                                        # "values" | "codes" (int8 codes
+                                        # + per-machine qparams on the
+                                        # wire — core.comm compressed
+                                        # gathers)
     uplink_mode: str = "points"         # points | coreset (repro.coresets):
                                         # "coreset" compresses each
                                         # machine's sample share to a
@@ -72,7 +78,8 @@ class SoccerConstants:
 
 def derive_constants(n: int, p_local: int, params: SoccerParams,
                      eta_override: int = 0, m: int = 0,
-                     uplink_dtype: str = "float32") -> SoccerConstants:
+                     uplink_dtype: str = "float32",
+                     uplink_wire: str = "values") -> SoccerConstants:
     log_term = math.log(1.1 * params.k / (params.delta * params.epsilon))
     d_k = 6.5 * log_term
     k_plus = int(math.ceil(params.k + 9.0 * log_term))
@@ -103,7 +110,7 @@ def derive_constants(n: int, p_local: int, params: SoccerParams,
         sharded_seeding=params.sharded_seeding,
         outlier_frac=params.outlier_frac,
         straggler_rate=params.straggler_rate,
-        uplink_dtype=uplink_dtype,
+        uplink_dtype=uplink_dtype, uplink_wire=uplink_wire,
         uplink_mode=params.uplink_mode,
         coreset_rows=coreset_rows, coreset_kb=coreset_kb)
 
@@ -171,11 +178,13 @@ def _draw_sample(comm, const: SoccerConstants, key: jax.Array,
         return draw_coreset_sample(comm, key, state.x, state.w, alive_eff,
                                    n_vec_resp, const.eta, const.cap,
                                    const.coreset_rows, const.coreset_kb,
-                                   upload_dtype=const.uplink_dtype)
+                                   upload_dtype=const.uplink_dtype,
+                                   wire=const.uplink_wire)
     pts, wts, real = draw_global_sample(comm, key, state.x, state.w,
                                         alive_eff, n_vec_resp, const.eta,
                                         const.cap,
-                                        upload_dtype=const.uplink_dtype)
+                                        upload_dtype=const.uplink_dtype,
+                                        wire=const.uplink_wire)
     return pts, wts, real, real
 
 
@@ -274,6 +283,13 @@ class SoccerResult:
     v_hist: np.ndarray
     uplink: np.ndarray         # points uploaded per round (incl. finalize)
     state: SoccerState
+    # achieved wire traffic per round (incl. finalize), measured at the
+    # traced collectives' itemsizes (core.comm.WireTally) — payload vs
+    # metadata (count vectors, HT weights, qparams) split out
+    wire_payload: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int64))
+    wire_meta: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int64))
 
 
 def flatten_centers(state: SoccerState) -> np.ndarray:
@@ -337,14 +353,16 @@ def run_soccer(x_parts: jax.Array, params: SoccerParams, *,
     optional host callback after each round (checkpointing, failure
     injection); if it returns a state, the loop continues from it.
     """
-    from repro.api.backends import resolve_backend
+    from repro.api.backends import check_uplink_wire, resolve_backend
     m, p, _ = x_parts.shape
     backend = resolve_backend(backend, m)
     comm = backend.make_comm(m)
     n = effective_n(m, p, w, alive)
+    ud = getattr(backend, "uplink_dtype", "float32")
     const = derive_constants(
-        n, p, params, eta_override, m=m,
-        uplink_dtype=getattr(backend, "uplink_dtype", "float32"))
+        n, p, params, eta_override, m=m, uplink_dtype=ud,
+        uplink_wire=check_uplink_wire(
+            getattr(backend, "uplink_wire", "auto"), ud))
     key = jax.random.PRNGKey(params.seed) if key is None else key
     state = init_state(jnp.asarray(x_parts), const, key, w=w, alive=alive)
     state = backend.put(state, STATE_MARKS)
@@ -363,16 +381,29 @@ def run_soccer(x_parts: jax.Array, params: SoccerParams, *,
     # spinning to max_rounds.
     rounds = 0
     prev_n = math.inf
+    t_round, t_fin = WireTally(), WireTally()
     while rounds < const.max_rounds and stopping_rule(
             int(state.n_remaining), const.eta, prev_n):
         prev_n = int(state.n_remaining)
-        state = step(state)
+        with wire_tally(t_round):   # records once, at the round's trace
+            state = step(state)
         rounds += 1
         if on_round is not None:
             state = on_round(rounds, state) or state
-    state = fin(state)
+    with wire_tally(t_fin):
+        state = fin(state)
 
+    # achieved wire bytes: static per-trace payload + per-row widths of
+    # the ragged channels x the realized row counts the state tracked
+    up = np.asarray(state.uplink)
+    wire_payload = np.concatenate(
+        [t_round.bytes_at(up[:rounds]),
+         t_fin.bytes_at(up[rounds:rounds + 1])])
+    wire_meta = np.concatenate(
+        [t_round.meta_bytes_at(up[:rounds]),
+         t_fin.meta_bytes_at(up[rounds:rounds + 1])])
     return SoccerResult(
         centers=flatten_centers(state), rounds=rounds, const=const,
         n_hist=np.asarray(state.n_hist), v_hist=np.asarray(state.v_hist),
-        uplink=np.asarray(state.uplink), state=state)
+        uplink=up, state=state,
+        wire_payload=wire_payload, wire_meta=wire_meta)

@@ -60,6 +60,8 @@ def fit_coreset_kmeans(x_parts, k: int, *, backend, key=None, w=None,
 
     comm = backend.make_comm(m)
     ud = getattr(backend, "uplink_dtype", "float32")
+    from repro.api.backends import check_uplink_wire
+    wire = check_uplink_wire(getattr(backend, "uplink_wire", "auto"), ud)
     x = backend.put(jnp.asarray(x_parts, jnp.float32), "machine")
     w_np = np.ones((m, p), np.float32) if w is None else np.asarray(
         w, np.float32)
@@ -73,7 +75,7 @@ def fit_coreset_kmeans(x_parts, k: int, *, backend, key=None, w=None,
         keys = jax.vmap(jax.random.fold_in, (None, 0))(kk, ids)
         cpts, cw = jax.vmap(build_coreset, (0, 0, 0, None, None))(
             keys, xp, wp, t, kb)
-        g_pts, g_w = gather_weighted(comm, cpts, cw, ud)
+        g_pts, g_w = gather_weighted(comm, cpts, cw, ud, wire=wire)
         k_bb = jax.random.fold_in(kk, m + 1)      # coordinator's key
         if blackbox == "minibatch":
             centers, cost = minibatch_kmeans(k_bb, g_pts, g_w, k,
@@ -87,14 +89,19 @@ def fit_coreset_kmeans(x_parts, k: int, *, backend, key=None, w=None,
         realized = jnp.sum(machine_up.astype(jnp.int32)) * t
         return centers, cost, realized
 
+    from repro.core.comm import WireTally, wire_tally
     fn = backend.compile(one_round, ("rep", "machine", "machine"),
                          ("rep", "rep", "rep"))
-    centers, cost, realized = fn(key, x, w_dev)
+    tally = WireTally()
+    with wire_tally(tally):
+        centers, cost, realized = fn(key, x, w_dev)
     up = np.asarray([int(realized)], np.int64)
     return ClusterResult(
         centers=np.asarray(centers), k=k, algo="coreset_kmeans",
         backend=backend.name, rounds=1, uplink_points=up,
         uplink_bytes=uplink_bytes(up, d, dtype=ud),
+        wire_bytes=np.asarray([tally.payload], np.int64),
+        wire_meta_bytes=np.asarray([tally.meta], np.int64),
         extra={"blackbox_cost": float(cost), "coreset_rows_per_machine": t,
                "bicriteria": kb})
 

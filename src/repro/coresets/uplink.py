@@ -27,7 +27,8 @@ from repro.coresets.sensitivity import build_coreset
 def draw_coreset_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
                         alive: jax.Array, n_vec_resp: jax.Array,
                         total: int, cap: int, t: int, kb: int,
-                        upload_dtype: str = "float32"
+                        upload_dtype: str = "float32",
+                        wire: str = "values"
                         ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                    jax.Array]:
     """Exact-size global sample, coreset-compressed before the upload.
@@ -40,6 +41,8 @@ def draw_coreset_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
       t: static per-machine coreset rows (the uplink knob).
       kb: static bicriteria center count for the machine-side solve.
       upload_dtype: payload precision (see ``core.sampling``).
+      wire: payload transport, "values" | "codes" (int8 codes +
+        per-machine qparams through the gather — see ``core.comm``).
 
     Returns:
       pts:  (m*t, d) coreset points in the uplink storage dtype,
@@ -68,6 +71,6 @@ def draw_coreset_sample(comm, key: jax.Array, x: jax.Array, w: jax.Array,
     w_s = w_pt * ht[:, None] * take.astype(jnp.float32)   # HT-weighted draw
     cpts, cw = jax.vmap(build_coreset, (0, 0, 0, None, None))(
         keys_c, pts, w_s, t, kb)
-    g_pts, g_w = gather_weighted(comm, cpts, cw, upload_dtype)
+    g_pts, g_w = gather_weighted(comm, cpts, cw, upload_dtype, wire=wire)
     uplink_rows = jnp.sum((c_vec > 0).astype(jnp.int32)) * t
     return g_pts, g_w, uplink_rows, jnp.sum(c_vec)

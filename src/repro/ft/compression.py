@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.comm import record_wire
+
 
 def affine_qparams(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Per-payload affine code book: (scale, zero_point) spanning
@@ -79,6 +81,16 @@ def topk_compress(g: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
     return flat[idx], idx.astype(jnp.int32)
 
 
+def topk_wire_bytes(m: int, k: int, dtype) -> int:
+    """THE top-k gather wire width: every machine ships k (value, int32
+    index) pairs. Single source of truth — ``compressed_psum`` both
+    records this through ``record_wire`` (so ``WireTally``/
+    ``ClusterResult.wire_bytes`` measure it) and returns it (so legacy
+    callers' modeled accounting can never diverge from the measured
+    number; a regression test pins the equality)."""
+    return int(m) * int(k) * (np.dtype(dtype).itemsize + 4)
+
+
 def compressed_psum(comm, g: jax.Array, err: jax.Array, k: int
                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Error-feedback top-k mean over machines.
@@ -101,10 +113,12 @@ def compressed_psum(comm, g: jax.Array, err: jax.Array, k: int
 
     sparse, vals, idx = jax.vmap(one)(corrected)
     new_err = corrected - sparse
-    total = comm.psum(sparse) / comm.m
-    # actual wire widths (value dtype + int32 index), as a python int so
-    # report rows stay JSON-serializable (jnp.int32 is not)
-    comm_bytes = int(comm.m) * int(k) * (np.dtype(g.dtype).itemsize + 4)
+    # the wire is the k (value, index) pairs per machine, NOT the dense
+    # reduction below (an XLA realization detail) — record the former
+    # and sum through the raw collective so nothing double-counts
+    comm_bytes = topk_wire_bytes(comm.m, k, g.dtype)
+    record_wire(payload=comm_bytes)
+    total = comm._reduce(sparse) / comm.m
     return total, new_err, comm_bytes
 
 

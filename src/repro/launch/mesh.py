@@ -41,3 +41,44 @@ def make_test_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
 
 def fsdp_axes(mesh: Mesh):
     return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def initialize_multi_host(coordinator_address=None, num_processes=None,
+                          process_id=None) -> int:
+    """Join (or skip) the jax distributed runtime; returns process_count.
+
+    With no arguments and no cluster environment this is a no-op
+    single-process launch — the common local/test path. With arguments
+    (or under a recognized cluster env: SLURM, Open MPI, GKE) it calls
+    ``jax.distributed.initialize`` so every host contributes its local
+    devices to the global device list; call BEFORE any other jax API.
+    ``repro.launch.__main__`` exposes this as the CLI entry.
+    """
+    explicit = (coordinator_address is not None or num_processes is not None
+                or process_id is not None)
+    if explicit and (num_processes or 1) > 1:
+        jax.distributed.initialize(
+            coordinator_address=coordinator_address,
+            num_processes=num_processes, process_id=process_id)
+    return jax.process_count()
+
+
+def machine_mesh(m=None) -> Mesh:
+    """One-axis ("machines",) mesh over the GLOBAL device list.
+
+    Process-count aware: under multi-host each process contributes its
+    ``jax.local_device_count()`` devices and the mesh spans all
+    ``jax.device_count()`` of them, so a MeshBackend built on it places
+    machine ``j`` on global device ``j`` regardless of which host owns
+    it. ``m`` defaults to the global device count and must divide into
+    it one-machine-per-device.
+    """
+    n = jax.device_count()
+    m = n if m is None else int(m)
+    if m != n:
+        raise ValueError(
+            f"machine_mesh places one machine per device: m={m} but the "
+            f"cluster has {n} global devices "
+            f"({jax.process_count()} process(es) x "
+            f"{jax.local_device_count()} local)")
+    return make_mesh_compat((m,), ("machines",))

@@ -258,6 +258,14 @@ def int8_coreset() -> Scenario:
             Condition("int8", dict(uplink_dtype="int8"),
                       algos=("soccer",),
                       note="affine int8 payloads (ft/compression)"),
+            # same int8 accounting, but transported at storage width —
+            # wire_MB shows 4x the modeled uplink_MB, the honest cost of
+            # compression that ends at the accounting (contrast the
+            # default codes wire above, where measured == modeled)
+            Condition("int8_values_wire",
+                      dict(uplink_dtype="int8", uplink_wire="values"),
+                      algos=("soccer",),
+                      note="int8 model, f32 transport (no codes wire)"),
             Condition("int8_coreset", dict(uplink_dtype="int8",
                                            uplink_mode="coreset"),
                       note="int8 x coreset-compressed uplink"),

@@ -13,21 +13,28 @@ from typing import Optional, Sequence
 
 _COLUMNS = (
     ("scenario", 22), ("algo", 16), ("condition", 16), ("cost_ratio", 10),
-    ("rounds", 6), ("uplink_pts", 10), ("uplink_MB", 9), ("time_s", 7),
-    ("compile_s", 9),
+    ("rounds", 6), ("uplink_pts", 10), ("uplink_MB", 9), ("wire_MB", 9),
+    ("x_omega", 9), ("time_s", 7), ("compile_s", 9),
 )
+# uplink_MB is the MODELED volume (uplink-dtype accounting); wire_MB the
+# ACHIEVED volume measured at the collectives' itemsizes, and x_omega is
+# wire bytes over the Ω(m·k) frontier (Zhang et al., arXiv:1507.00026).
 
 
 def _fmt(row: dict) -> Sequence[str]:
     if row.get("skipped"):
         return (row["scenario"], row["algo"], row["condition"],
-                "—", "—", "—", "—", "—", "—")
+                "—", "—", "—", "—", "—", "—", "—", "—")
+    wire = row.get("wire_bytes")
+    omega = row.get("bytes_vs_omega_mk")
     return (
         row["scenario"], row["algo"], row["condition"],
         f"{row['cost_ratio']:.3f}",
         str(row["rounds"]),
         str(row["uplink_points"]),
         f"{row['uplink_bytes'] / 1e6:.3f}",
+        "—" if wire is None else f"{wire / 1e6:.3f}",
+        "—" if omega is None else f"{omega:.1f}",
         f"{row['wall_time_s']:.2f}",       # steady-state (compile excluded)
         f"{row.get('compile_s', 0.0):.2f}",
     )

@@ -16,7 +16,14 @@ comparable table (the paper's Tables 2/3 become two slices of it):
                     whose cost matches same-condition SOCCER, the paper's
                     Table-3 protocol);
 * ``uplink_points`` / ``uplink_bytes`` — realized machine->coordinator
-                    upload (bytes are uplink-dtype aware);
+                    upload (bytes are uplink-dtype aware, MODELED);
+* ``wire_bytes``  — ACHIEVED wire volume (payload + metadata sideband)
+                    measured at the traced collectives' itemsizes
+                    (``core.comm.WireTally``); falls back to the model
+                    for drivers without a tally;
+* ``bytes_vs_omega_mk`` — ``wire_bytes`` over the Ω(m·k) communication
+                    frontier (Zhang et al., arXiv:1507.00026) — how far
+                    each algorithm sits above the lower bound;
 * ``wall_time_s`` — STEADY-STATE fit() wall time: the cell's winning
                     configuration is re-run once with every compilation
                     already cached, so the number tracks kernel/dispatch
@@ -103,12 +110,19 @@ def _cell(scenario: Scenario, algo: str, condition: Condition,
     res2, _ = run(winning)
     steady_wall = float(res2.wall_time_s)
 
+    from repro.api.result import omega_mk_bytes
+    wire_total = res.wire_bytes_total
+    if wire_total is None:          # drivers without a WireTally fall
+        wire_total = int(res.uplink_bytes_total)   # back to the model
+    omega = omega_mk_bytes(scenario.m, k, int(np.asarray(data.x).shape[-1]))
     row.update(
         cost=cost, cost_ratio=cost / max(base_cost, 1e-30),
         rounds=int(res.rounds),
         centers=int(res.centers.shape[0]),
         uplink_points=int(res.uplink_points_total),
         uplink_bytes=int(res.uplink_bytes_total),
+        wire_bytes=int(wire_total),
+        bytes_vs_omega_mk=round(wire_total / max(omega, 1), 3),
         wall_time_s=steady_wall,
         compile_s=max(first_wall - steady_wall, 0.0))
     if res.n_hist is not None:
@@ -144,6 +158,7 @@ def run_stream_scenario(scenario: Scenario, quick: bool = True,
     staleness/uplink comparison columns the acceptance criteria read."""
     import time as _time
 
+    from repro.api.result import omega_mk_bytes
     from repro.scenarios.registry import ScenarioData
     from repro.streaming.protocol import run_stream_suite
 
@@ -167,6 +182,13 @@ def run_stream_scenario(scenario: Scenario, quick: bool = True,
             rounds=r["reclusters"], centers=k,
             uplink_points=r["uplink_points"],
             uplink_bytes=r["uplink_bytes"],
+            # streaming runner predates the WireTally path: modeled bytes
+            # stand in for measured so the wire-gate columns stay total
+            wire_bytes=int(r["uplink_bytes"]),
+            bytes_vs_omega_mk=round(
+                r["uplink_bytes"]
+                / max(omega_mk_bytes(scenario.m, k,
+                                     int(data.x.shape[-1])), 1), 3),
             wall_time_s=wall / max(len(stream_rows), 1), compile_s=0.0,
             staleness_cost=r["staleness_cost"],
             staleness_per_point=r["staleness_per_point"],

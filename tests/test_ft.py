@@ -176,13 +176,17 @@ def test_compression_bytes_savings():
 
 def test_compressed_psum_bytes_dtype_aware():
     """comm_bytes uses the actual value/index widths (not a hardcoded 8)
-    and is a python int so report rows stay JSON-serializable."""
+    and is a python int so report rows stay JSON-serializable — and it
+    IS ``topk_wire_bytes``, the single source of truth the WireTally
+    records (no divergent per-call-site arithmetic)."""
+    from repro.ft.compression import topk_wire_bytes
     comm = VirtualCluster(4)
     for dtype, itemsize in ((jnp.float32, 4), (jnp.bfloat16, 2)):
         g = jnp.ones((4, 32), dtype)
         _, _, nbytes = compressed_psum(comm, g, init_error_feedback(g), k=8)
         assert isinstance(nbytes, int)
         assert nbytes == 4 * 8 * (itemsize + 4), dtype
+        assert nbytes == topk_wire_bytes(4, 8, dtype)
 
 
 def test_outlier_robust_finalize():

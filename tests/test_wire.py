@@ -1,0 +1,399 @@
+"""The real wire path: ragged gathers, int8 codes transport, and the
+measured wire-byte accounting (core.comm.WireTally).
+
+Single-device tests cover the VirtualCluster legs and the
+modeled-vs-measured contract; ``@pytest.mark.mesh`` tests need >= 2
+devices (``make test-mesh`` runs them under
+``XLA_FLAGS=--xla_force_host_platform_device_count={2,8}``, as does the
+CI mesh matrix) and check that the mesh collectives move bit-identical
+codes + qparams and a quarter of the f32 bytes on the int8 codes wire.
+"""
+import importlib.util
+import json
+import pathlib
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import fit
+from repro.api.backends import check_uplink_wire
+from repro.core.comm import VirtualCluster, WireTally, wire_tally
+from repro.core.sampling import draw_global_sample, quantize_uplink
+from repro.ft.compression import (compressed_psum, fake_quantize_int8,
+                                  init_error_feedback, topk_wire_bytes)
+
+M = 4
+
+
+def _blocks(m=M, cap=6, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(m, cap, d)).astype(np.float32))
+
+
+# ------------------------------------------------------------ ragged gather
+
+
+def test_gather_ragged_zero_row_machines():
+    """Machines with count 0 contribute NOTHING — live rows from the
+    others pack contiguously in machine order, the tail is exactly 0."""
+    comm = VirtualCluster(M)
+    x = _blocks()
+    counts = jnp.asarray([2, 0, 3, 1], jnp.int32)
+    out = comm.gather_ragged(x, counts, rows=8)
+    expect = np.concatenate([np.asarray(x)[0, :2], np.asarray(x)[2, :3],
+                             np.asarray(x)[3, :1]])
+    assert np.array_equal(np.asarray(out)[:6], expect)
+    assert np.all(np.asarray(out)[6:] == 0)
+
+
+def test_gather_ragged_all_dead_but_one():
+    comm = VirtualCluster(M)
+    x = _blocks()
+    counts = jnp.asarray([0, 0, 4, 0], jnp.int32)
+    out = comm.gather_ragged(x, counts, rows=8)
+    assert np.array_equal(np.asarray(out)[:4], np.asarray(x)[2, :4])
+    assert np.all(np.asarray(out)[4:] == 0)
+
+
+def test_gather_ragged_overflow_truncates_with_warning():
+    """Counts beyond the static budget truncate the machine-order tail —
+    and say so (the warning only fires eagerly; under jit the counts are
+    tracers and the truncation is silent but identical)."""
+    comm = VirtualCluster(M)
+    x = _blocks()
+    counts = jnp.asarray([3, 3, 3, 3], jnp.int32)
+    with pytest.warns(UserWarning, match="truncated"):
+        out = comm.gather_ragged(x, counts, rows=7)
+    expect = np.concatenate([np.asarray(x)[0, :3], np.asarray(x)[1, :3],
+                             np.asarray(x)[2, :1]])
+    assert np.array_equal(np.asarray(out), expect)
+
+
+def test_gather_ragged_compressed_zero_rows_and_reconstruction():
+    """The codes wire packs like the plain gather and reconstructs each
+    machine's rows on its own 256-level grid (== fake_quantize_int8)."""
+    comm = VirtualCluster(M)
+    x = _blocks()
+    counts = jnp.asarray([2, 0, 3, 1], jnp.int32)
+    out = np.asarray(comm.gather_ragged_compressed(x, counts, rows=8))
+    fq = np.asarray(jax.vmap(fake_quantize_int8)(x))
+    expect = np.concatenate([fq[0, :2], fq[2, :3], fq[3, :1]])
+    np.testing.assert_allclose(out[:6], expect, atol=1e-6)
+    assert np.all(out[6:] == 0)
+
+
+# ------------------------------------------------------- compressed concat
+
+
+def test_concat_machines_compressed_matches_fake_quantize():
+    """Per-machine code books: the gathered reconstruction is bitwise
+    what each machine's own fake-quantize would produce (eager; under
+    jit XLA may fuse the dequantize FMA, a ~1e-7 difference)."""
+    comm = VirtualCluster(M)
+    x = _blocks(seed=3)
+    out = np.asarray(comm.concat_machines_compressed(x))
+    expect = np.asarray(jax.vmap(fake_quantize_int8)(x)).reshape(-1, 3)
+    assert np.array_equal(out, expect)
+
+
+def test_compressed_needs_machine_axis():
+    comm = VirtualCluster(M)
+    with pytest.raises(ValueError, match="code book"):
+        comm.all_machines_compressed(jnp.ones((M, 5)))
+    with pytest.raises(ValueError, match="blocks"):
+        comm.gather_ragged_compressed(jnp.ones((M, 5)),
+                                      jnp.ones((M,), jnp.int32), 5)
+
+
+def test_draw_global_sample_codes_values_parity():
+    """wire= changes achieved bytes, never the statistics: for int8 the
+    codes reconstruction equals the values-wire fake-quantized payload
+    (same mask, same per-machine qparams)."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(M, 32, 3)).astype(np.float32))
+    w = jnp.ones((M, 32), jnp.float32)
+    alive = jnp.asarray(rng.random((M, 32)) < 0.8)
+    n_vec = jnp.sum(alive, axis=1).astype(jnp.int32)
+    key = jax.random.PRNGKey(0)
+    kw = dict(total=24, cap=16, upload_dtype="int8")
+    p_codes, w_codes, r_codes = draw_global_sample(
+        VirtualCluster(M), key, x, w, alive, n_vec, wire="codes", **kw)
+    p_vals, w_vals, r_vals = draw_global_sample(
+        VirtualCluster(M), key, x, w, alive, n_vec, wire="values", **kw)
+    np.testing.assert_allclose(np.asarray(p_codes), np.asarray(p_vals),
+                               atol=1e-6)
+    assert np.array_equal(np.asarray(w_codes), np.asarray(w_vals))
+    assert int(r_codes) == int(r_vals)
+
+
+# ------------------------------------------------------------- wire tallies
+
+
+def test_wire_tally_records_at_trace_time_once():
+    """Recording happens when the function TRACES, not when it runs: a
+    jitted collective charges its (static, exact) bytes exactly once no
+    matter how many times the compiled function is called."""
+    comm = VirtualCluster(M)
+    x = _blocks()        # (4, 6, 3) f32
+
+    @jax.jit
+    def fn(x):
+        return comm.concat_machines(x), comm.psum(jnp.sum(x, axis=(1, 2)))
+
+    t = WireTally()
+    with wire_tally(t):
+        fn(x)
+        fn(x)            # second call: already compiled, records nothing
+    assert t.payload == 4 * 6 * 3 * 4          # the concat, f32
+    assert t.meta == 4 * 4                     # the psum'd (m,) scalar sum
+    assert t.row_bytes == 0
+
+    t2 = WireTally()     # outside any trace: compiled calls record nothing
+    with wire_tally(t2):
+        fn(x)
+    assert (t2.payload, t2.meta) == (0, 0)
+
+
+def test_wire_tally_row_bytes_merge_by_max():
+    """Two same-shape ragged gathers in one traced fn share one realized
+    row counter — widths merge by max, not sum (summing would
+    double-charge a SOCCER round's two sample uploads)."""
+    comm = VirtualCluster(M)
+    x = _blocks()
+    counts = jnp.asarray([1, 1, 1, 1], jnp.int32)
+    t = WireTally()
+    with wire_tally(t):
+        comm.gather_ragged(x, counts, rows=8)
+        comm.gather_ragged(x, counts, rows=8)
+    assert t.row_bytes == 3 * 4                # one (d=3, f32) row width
+    assert t.meta == 2 * 4 * M                 # but BOTH length prefixes
+    assert np.array_equal(t.bytes_at(np.asarray([5, 7])),
+                          np.asarray([60, 84]))
+
+
+def test_compressed_psum_modeled_equals_tallied():
+    """One source of truth: the comm_bytes compressed_psum returns IS
+    what its wire records (satellite: no divergent per-call-site
+    arithmetic)."""
+    comm = VirtualCluster(M)
+    g = jnp.asarray(np.random.default_rng(1).normal(
+        size=(M, 32)).astype(np.float32))
+    t = WireTally()
+    with wire_tally(t):
+        _, _, nbytes = jax.jit(
+            lambda g, e: compressed_psum(comm, g, e, k=8)
+        )(g, init_error_feedback(g))
+    assert int(nbytes) == topk_wire_bytes(M, 8, jnp.float32)
+    assert t.payload == int(nbytes)
+
+
+# ------------------------------------------- modeled vs measured (drivers)
+
+
+def _data(n=2048, d=4, m=8, seed=0):
+    rng = np.random.default_rng(seed)
+    c = rng.normal(scale=4.0, size=(6, d))
+    x = (c[rng.integers(6, size=n)]
+         + rng.normal(size=(n, d))).astype(np.float32)
+    return x.reshape(m, n // m, d)
+
+
+def test_int8_codes_measured_equals_modeled():
+    """THE wire-gate invariant: on the int8 codes wire the achieved
+    payload bytes equal the modeled uplink_bytes exactly, for every
+    algorithm with a ragged/fixed gather uplink."""
+    x = _data()
+    for algo, kw in [("soccer", dict(epsilon=0.2)),
+                     ("eim11", {}), ("lloyd", {}),
+                     ("coreset_kmeans", dict(coreset_size=256))]:
+        res = fit(x, 5, algo=algo, backend="virtual",
+                  uplink_dtype="int8", **kw)
+        assert res.wire_bytes is not None, algo
+        assert np.array_equal(res.wire_bytes, res.uplink_bytes), (
+            algo, res.wire_bytes, res.uplink_bytes)
+        assert res.params.get("uplink_dtype") == "int8"
+
+
+def test_int8_values_wire_measures_4x_model():
+    """uplink_wire="values" is honest: the int8 *accounting* stays, but
+    the transport is the f32 reconstruction — measured shows 4x."""
+    x = _data()
+    res = fit(x, 5, algo="soccer", backend="virtual", epsilon=0.2,
+              uplink_dtype="int8", uplink_wire="values")
+    assert np.array_equal(res.wire_bytes, 4 * res.uplink_bytes)
+    assert res.params["uplink_wire"] == "values"
+
+
+def test_f32_wire_measured_equals_modeled():
+    x = _data()
+    res = fit(x, 5, algo="soccer", backend="virtual", epsilon=0.2)
+    assert np.array_equal(res.wire_bytes, res.uplink_bytes)
+    assert res.wire_bytes_total == int(
+        np.sum(res.wire_bytes) + np.sum(res.wire_meta_bytes))
+
+
+def test_uplink_wire_validation():
+    check = check_uplink_wire
+    assert check("auto", "int8") == "codes"
+    assert check("auto", "float32") == "values"
+    assert check("codes", "int8") == "codes"
+    with pytest.raises(ValueError, match="codes"):
+        check("codes", "float32")
+    with pytest.raises(ValueError):
+        check("zip", "int8")
+    with pytest.raises(ValueError, match="codes"):
+        fit(_data(), 5, algo="soccer", backend="virtual",
+            uplink_wire="codes", epsilon=0.2)
+
+
+# --------------------------------------------------- wire regression gate
+
+
+def _gate():
+    path = (pathlib.Path(__file__).resolve().parents[1]
+            / "benchmarks" / "check_regression.py")
+    spec = importlib.util.spec_from_file_location("check_regression", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _sweep_json(tmp_path, name, wire_bytes, **over):
+    row = dict(scenario="s", algo="soccer", condition="int8",
+               skipped=False, wire_bytes=wire_bytes,
+               uplink_bytes=wire_bytes, bytes_vs_omega_mk=2.0, **over)
+    p = tmp_path / name
+    p.write_text(json.dumps({"rows": [row]}))
+    return p
+
+
+def test_wire_gate_fails_on_growth(tmp_path):
+    gate = _gate()
+    base = _sweep_json(tmp_path, "base.json", 1000)
+    ok = _sweep_json(tmp_path, "ok.json", 1050)        # +5%
+    bad = _sweep_json(tmp_path, "bad.json", 1200)      # +20%
+    assert gate.check_scenarios(ok, base, threshold=0.10) == 0
+    assert gate.check_scenarios(bad, base, threshold=0.10) == 1
+    assert gate.main(["--scenarios-current", str(bad),
+                      "--scenarios-baseline", str(base)]) == 1
+
+
+def test_wire_gate_falls_back_to_modeled_bytes(tmp_path):
+    """Baselines committed before the WireTally schema gate on the
+    modeled uplink_bytes instead of silently skipping every row."""
+    gate = _gate()
+    base = _sweep_json(tmp_path, "base.json", None)
+    cur = _sweep_json(tmp_path, "cur.json", 1500)
+    # old-schema row: no wire_bytes key at all
+    rows = json.loads(base.read_text())
+    del rows["rows"][0]["wire_bytes"]
+    rows["rows"][0]["uplink_bytes"] = 1000
+    base.write_text(json.dumps(rows))
+    assert gate.check_scenarios(cur, base, threshold=0.10) == 1
+
+
+# ------------------------------------------------------------ mesh parity
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="mesh wire tests need >= 2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+
+
+def _mesh_backend():
+    from repro.api.backends import MeshBackend
+    from repro.launch.mesh import machine_mesh
+    return MeshBackend(machine_mesh())
+
+
+@pytest.mark.mesh
+@needs_mesh
+def test_mesh_codes_qparams_bit_parity():
+    """The mesh collective moves EXACTLY the virtual wire's bits: int8
+    codes and per-machine zero-points gathered over the mesh are
+    bit-equal to the single-device path. The scale and the reconstruction
+    are compared allclose: under jit XLA lowers the /255 to a
+    reciprocal-multiply (1-ulp scale shift) and may fuse the dequantize
+    FMA — neither changes any code."""
+    from repro.ft.compression import affine_qparams, quantize_affine_int8
+    bk = _mesh_backend()
+    m = jax.device_count()
+    comm_m = bk.make_comm(m)
+    x = _blocks(m=m, cap=5, d=3, seed=11)
+
+    def wire(xp):
+        scale, zp = affine_qparams(xp)
+        codes = quantize_affine_int8(xp, scale, zp)
+        return (comm_m._gather(codes), comm_m._gather(scale),
+                comm_m._gather(zp), comm_m.all_machines_compressed(xp))
+
+    fn = bk.compile(wire, ("machine",), ("rep", "rep", "rep", "rep"))
+    codes_m, scale_m, zp_m, recon_m = fn(bk.put(x, "machine"))
+
+    scale_v, zp_v = affine_qparams(x)
+    codes_v = quantize_affine_int8(x, scale_v, zp_v)
+    assert np.asarray(codes_m).dtype == np.int8   # 1-byte wire payload
+    assert np.array_equal(np.asarray(codes_m), np.asarray(codes_v))
+    np.testing.assert_allclose(np.asarray(scale_m), np.asarray(scale_v),
+                               rtol=1e-6)
+    assert np.array_equal(np.asarray(zp_m), np.asarray(zp_v))
+    recon_v = VirtualCluster(m).all_machines_compressed(x)
+    np.testing.assert_allclose(np.asarray(recon_m), np.asarray(recon_v),
+                               atol=1e-6)
+
+
+@pytest.mark.mesh
+@needs_mesh
+def test_mesh_ragged_gather_matches_virtual_bitwise():
+    """Pure gather + scatter, no arithmetic — the ragged compaction must
+    be bit-identical across backends, zero-row machines included."""
+    bk = _mesh_backend()
+    m = jax.device_count()
+    comm_m, comm_v = bk.make_comm(m), VirtualCluster(m)
+    x = _blocks(m=m, cap=5, d=3, seed=13)
+    counts = jnp.asarray([2, 0] * (m // 2), jnp.int32)
+
+    fn = bk.compile(
+        lambda xp: comm_m.gather_ragged(xp, counts, rows=3 * m),
+        ("machine",), "rep")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # counts concrete inside trace
+        out_m = fn(bk.put(x, "machine"))
+        out_v = comm_v.gather_ragged(x, counts, rows=3 * m)
+    assert np.array_equal(np.asarray(out_m), np.asarray(out_v))
+
+
+@pytest.mark.mesh
+@needs_mesh
+def test_mesh_int8_codes_wire_is_quarter_of_f32():
+    """Acceptance: on int8 uplink scenarios the measured mesh wire bytes
+    are ~1/4 of the f32 baseline (qparams overhead rides the metadata
+    channel, not the payload)."""
+    m = jax.device_count()
+    x = _data(n=256 * m, d=4, m=m, seed=5)
+    f32 = fit(x, 5, algo="soccer", backend=_mesh_backend(), epsilon=0.2)
+    i8 = fit(x, 5, algo="soccer", backend=_mesh_backend(), epsilon=0.2,
+             uplink_dtype="int8")
+    assert f32.backend == i8.backend == "mesh"
+    ratio = np.sum(i8.wire_bytes) / np.sum(f32.wire_bytes)
+    assert ratio <= 0.3, (i8.wire_bytes, f32.wire_bytes)
+    assert np.array_equal(i8.wire_bytes, i8.uplink_bytes)
+
+
+@pytest.mark.mesh
+@needs_mesh
+def test_mesh_fit_codes_matches_values_wire():
+    """Same centers either way on the mesh backend — the wire changes
+    bytes, not statistics."""
+    m = jax.device_count()
+    x = _data(n=256 * m, d=4, m=m, seed=9)
+    codes = fit(x, 5, algo="coreset_kmeans", backend=_mesh_backend(),
+                coreset_size=32 * m, uplink_dtype="int8")
+    vals = fit(x, 5, algo="coreset_kmeans", backend=_mesh_backend(),
+               coreset_size=32 * m, uplink_dtype="int8",
+               uplink_wire="values")
+    np.testing.assert_allclose(codes.centers, vals.centers, atol=1e-4)
+    assert np.sum(vals.wire_bytes) == 4 * np.sum(codes.wire_bytes)

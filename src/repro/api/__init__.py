@@ -20,6 +20,7 @@ from repro.api import algorithms as _algorithms  # noqa: F401  (registers
                                                  # the built-in drivers)
 from repro.coresets import algorithms as _coreset_algorithms  # noqa: F401
                                                  # (registers coreset_kmeans)
+from repro import robust as _robust  # noqa: F401  (registers kzmeans)
 
 __all__ = [
     "Backend", "ClusterResult", "CommBackend", "MeshBackend",

@@ -115,7 +115,9 @@ def distributed_lloyd(comm, pts, ws, centers, iters: int) -> jax.Array:
 
 
 def distributed_threshold(comm, pts, ws, c_iter, k: int, d_k: float,
-                          alpha, mode: str = "bisect") -> jax.Array:
+                          alpha, mode: str = "bisect",
+                          outlier_mass=0.0, extra_top: int = 0
+                          ) -> jax.Array:
     """v from the truncated cost of sharded P2.
 
     mode='topk':   gather the union of per-machine top-l candidates
@@ -134,10 +136,13 @@ def distributed_threshold(comm, pts, ws, c_iter, k: int, d_k: float,
 
     d2, local_tot = jax.vmap(per_machine)(pts, ws)
     total = comm.psum(local_tot)
-    trunc_mass = 1.5 * (k + 1) * d_k / jnp.maximum(alpha, 1e-30)
+    # outlier_mass: the (k, z) extra truncation (z = outlier_frac·N
+    # population points) — see core.truncated_cost.removal_threshold
+    trunc_mass = (1.5 * (k + 1) * d_k / jnp.maximum(alpha, 1e-30)
+                  + outlier_mass)
 
     if mode == "topk":
-        l_pts = int(math.ceil(1.5 * (k + 1) * d_k)) + 8
+        l_pts = int(math.ceil(1.5 * (k + 1) * d_k)) + 8 + int(extra_top)
         t = min(pts.shape[1], l_pts)
         top_d2, top_idx = lax.top_k(d2, t)                   # (local_m, t)
         top_w = jnp.take_along_axis(ws, top_idx, axis=1)
@@ -172,14 +177,14 @@ def distributed_threshold(comm, pts, ws, c_iter, k: int, d_k: float,
 
 
 def sharded_center_threshold(comm, const, key1, key2, key_bb, state,
-                             alive_eff, n_vec_resp, n_total
+                             alive_eff, n_vec_r1, n_vec_r2, n_total
                              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Drop-in replacement for the gather->cluster->threshold sequence."""
     p1, w1, real1 = draw_local_sample(
-        comm, key1, state.x, state.w, alive_eff, n_vec_resp,
+        comm, key1, state.x, state.w, alive_eff, n_vec_r1,
         const.eta, const.cap_sharded)
     p2, w2, real2 = draw_local_sample(
-        comm, key2, state.x, state.w, alive_eff, n_vec_resp,
+        comm, key2, state.x, state.w, alive_eff, n_vec_r2,
         const.eta, const.cap_sharded)
 
     if const.sharded_seeding == "kmeanspar":
@@ -189,10 +194,18 @@ def sharded_center_threshold(comm, const, key1, key2, key_bb, state,
         init = distributed_kmeans_pp(key_bb, comm, p1, w1, const.k_plus)
     c_iter = distributed_lloyd(comm, p1, w1, init, const.lloyd_iters)
 
-    alpha = real1.astype(jnp.float32) / jnp.maximum(
+    # alpha is P2's OWN realized sampling rate: cap_sharded truncation
+    # and per-draw straggler deadlines make real1 != real2, and the
+    # threshold is a P2 statistic (see core.soccer.soccer_round).
+    alpha = real2.astype(jnp.float32) / jnp.maximum(
         n_total.astype(jnp.float32), 1.0)
+    outlier_mass = jnp.float32(const.outlier_frac) * n_total.astype(
+        jnp.float32)
     v = distributed_threshold(comm, p2, w2, c_iter, const.k, const.d_k,
-                              alpha, mode=const.sharded_threshold)
+                              alpha, mode=const.sharded_threshold,
+                              outlier_mass=outlier_mass,
+                              extra_top=int(math.ceil(
+                                  const.outlier_frac * const.eta)))
     return c_iter, v, real1 + real2
 
 

@@ -31,7 +31,7 @@ from repro.core.comm import WireTally, wire_tally
 from repro.core.kmeans import kmeans
 from repro.core.minibatch import minibatch_kmeans
 from repro.core.sampling import draw_global_sample
-from repro.core.truncated_cost import removal_threshold
+from repro.core.truncated_cost import removal_threshold, trim_top_mass
 from repro.kernels import ops
 
 
@@ -190,7 +190,8 @@ def _draw_sample(comm, const: SoccerConstants, key: jax.Array,
 
 def soccer_round(state: SoccerState, comm, const: SoccerConstants
                  ) -> SoccerState:
-    key, k_s1, k_s2, k_bb, k_strag = jax.random.split(state.key, 5)
+    key, k_s1, k_s2, k_bb, k_strag1, k_strag2 = jax.random.split(
+        state.key, 6)
     alive_eff = state.alive & state.machine_ok[:, None]
 
     # --- machine counts (the only per-machine metadata the coordinator needs)
@@ -198,34 +199,49 @@ def soccer_round(state: SoccerState, comm, const: SoccerConstants
     n_vec = comm.all_machines(n_local)
     n_total = jnp.sum(n_vec)
 
-    # --- straggler deadline (repro.ft): laggards skip *sampling* this round
-    if const.straggler_rate > 0.0:
-        respond = jax.random.uniform(k_strag, (comm.m,)) >= const.straggler_rate
-        respond = respond | (jnp.sum(jnp.where(respond, n_vec, 0)) == 0)
-    else:
-        respond = jnp.ones((comm.m,), bool)
-    n_vec_resp = jnp.where(respond, n_vec, 0)
+    # --- straggler deadline (repro.ft): laggards skip *sampling* this
+    # round. Each upload (P1, P2) is its own communication event with its
+    # own deadline, so the respond masks are drawn independently — the
+    # two draws can (and under imbalance do) realize different sizes.
+    def _respond(kk):
+        if const.straggler_rate <= 0.0:
+            return jnp.ones((comm.m,), bool)
+        r = jax.random.uniform(kk, (comm.m,)) >= const.straggler_rate
+        return r | (jnp.sum(jnp.where(r, n_vec, 0)) == 0)
+
+    n_vec_r1 = jnp.where(_respond(k_strag1), n_vec, 0)
+    n_vec_r2 = jnp.where(_respond(k_strag2), n_vec, 0)
+
+    # the (k, z) truncation mass: z = outlier_frac·N population points
+    # must not inflate the removal threshold (0 when the knob is off)
+    outlier_mass = jnp.float32(const.outlier_frac) * n_total.astype(
+        jnp.float32)
 
     if const.sharded_coordinator:
         # beyond-paper: samples stay sharded; collectives shrink from
         # O(eta*d) to O(k_plus*d*iters)  (see core/sharded_kmeans.py)
         from repro.core.sharded_kmeans import sharded_center_threshold
         c_iter, v, uplink_pts = sharded_center_threshold(
-            comm, const, k_s1, k_s2, k_bb, state, alive_eff, n_vec_resp,
-            n_total)
+            comm, const, k_s1, k_s2, k_bb, state, alive_eff,
+            n_vec_r1, n_vec_r2, n_total)
     else:
         # --- paper-faithful: upload P1, P2 (independent draws; in
         # coreset mode each is compressed machine-side before upload)
         p1, w1, up1, real1 = _draw_sample(comm, const, k_s1, state,
-                                          alive_eff, n_vec_resp)
-        p2, w2, up2, _ = _draw_sample(comm, const, k_s2, state,
-                                      alive_eff, n_vec_resp)
-        # --- coordinator: C_iter = A(P1, k_plus); threshold from P2
+                                          alive_eff, n_vec_r1)
+        p2, w2, up2, real2 = _draw_sample(comm, const, k_s2, state,
+                                          alive_eff, n_vec_r2)
+        # --- coordinator: C_iter = A(P1, k_plus); threshold from P2.
+        # alpha is P2's OWN realized sampling rate: the truncation mass
+        # L = l/alpha and the psi->population rescale both describe the
+        # P2 statistic, so scaling it by P1's draw (which cap truncation
+        # and per-draw straggler deadlines can make differ) biases v.
         c_iter = _blackbox(const, k_bb, p1, w1, const.k_plus)
         d2_p2, _ = ops.min_dist(p2, c_iter)
-        alpha = real1.astype(jnp.float32) / jnp.maximum(
+        alpha = real2.astype(jnp.float32) / jnp.maximum(
             n_total.astype(jnp.float32), 1.0)
-        v = removal_threshold(d2_p2, w2, const.k, const.d_k, alpha)
+        v = removal_threshold(d2_p2, w2, const.k, const.d_k, alpha,
+                              outlier_mass=outlier_mass)
         uplink_pts = up1 + up2
 
     # --- broadcast (v, C_iter) is free (replicated); machines remove points
@@ -250,7 +266,15 @@ def soccer_round(state: SoccerState, comm, const: SoccerConstants
 
 def soccer_finalize(state: SoccerState, comm, const: SoccerConstants
                     ) -> SoccerState:
-    """Gather the <= eta survivors and cluster them with A(V, k)."""
+    """Gather the <= eta survivors and cluster them with A(V, k).
+
+    With ``outlier_frac > 0`` (the paper's §9 robustness knob) the
+    finalize is one trimmed-k-means step: a provisional A(V, k) fit,
+    then the top ``z = outlier_frac·N`` weight mass of the gathered
+    survivors (by distance to the provisional centers) is zeroed out of
+    the HT weights before the final fit — the blackbox never spends
+    centers chasing the z farthest cost units.
+    """
     key, k_bb = jax.random.split(state.key)
     alive_eff = state.alive & state.machine_ok[:, None]
     n_local = jnp.sum(alive_eff, axis=1).astype(jnp.int32)
@@ -259,6 +283,13 @@ def soccer_finalize(state: SoccerState, comm, const: SoccerConstants
 
     v_pts, v_w, up, _ = _draw_sample(comm, const, key, state, alive_eff,
                                      n_vec)
+    if const.outlier_frac > 0.0:
+        k_prov, k_bb = jax.random.split(k_bb)
+        c_prov = _blackbox(const, k_prov, v_pts, v_w, const.k)
+        d2, _ = ops.min_dist(v_pts, c_prov)
+        z_mass = jnp.float32(const.outlier_frac) * n_total.astype(
+            jnp.float32)
+        v_w = trim_top_mass(d2, v_w, z_mass)
     c_fin = _blackbox(const, k_bb, v_pts, v_w, const.k)
 
     i = state.round_idx

@@ -47,14 +47,49 @@ def weighted_top_mass(d2: jax.Array, w: jax.Array,
     return jnp.sum(taken * d2s)
 
 
+def trim_top_mass(d2: jax.Array, w: jax.Array,
+                  mass: jax.Array) -> jax.Array:
+    """Per-point weights after dropping ``mass`` weight of the largest d2.
+
+    The per-point form of :func:`weighted_truncated_cost`: the returned
+    ``kept`` satisfies ``0 <= kept <= w`` elementwise, drops exactly
+    ``min(mass, sum(w))`` weight from the highest-d2 end (the boundary
+    point keeps its fractional remainder), and
+    ``sum(kept * d2) == weighted_truncated_cost(d2, w, mass)``. This is
+    the (k, z)-trimming primitive: refitting with ``kept`` in place of
+    ``w`` ignores the top ``mass`` cost outliers.
+
+    Args:
+      d2: (n,) squared distances.
+      w: (n,) nonneg weights (0 = padding).
+      mass: scalar weight mass to drop from the top.
+
+    Returns:
+      (n,) float32 kept weights, in the ORIGINAL point order.
+    """
+    order = jnp.argsort(-d2)
+    ws = w[order].astype(jnp.float32)
+    cum = jnp.cumsum(ws)
+    kept = jnp.clip(cum - mass, 0.0, ws)
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    return kept[inv]
+
+
 def removal_threshold(d2: jax.Array, w: jax.Array, k: int, d_k: float,
-                      alpha: jax.Array) -> jax.Array:
+                      alpha: jax.Array,
+                      outlier_mass: jax.Array = 0.0) -> jax.Array:
     """SOCCER line 9: v = 2·cost_{3/2(k+1)d_k}(P2, C_iter) / (3·k·d_k).
 
     With HT weights this is v = ψ·α/(k·d_k), ψ = (2/3)·Σ_kept w·d2, where
     the truncated *sample count* l = 3/2·(k+1)·d_k corresponds to weight
     mass L = l/α (each sample point represents 1/α population points).
+
+    ``outlier_mass`` (the (k, z) extension, z = outlier_frac·N population
+    points) adds to the truncated weight mass directly: with z gross
+    outliers in the data, the top-z mass of P2's cost is contamination,
+    not structure, and must not inflate the removal threshold.
     """
-    trunc_mass = 1.5 * (k + 1) * d_k / jnp.maximum(alpha, 1e-30)
+    trunc_mass = (1.5 * (k + 1) * d_k / jnp.maximum(alpha, 1e-30)
+                  + outlier_mass)
     psi = (2.0 / 3.0) * weighted_truncated_cost(d2, w, trunc_mass)
     return psi * alpha / (k * d_k)

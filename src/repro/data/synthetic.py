@@ -158,21 +158,43 @@ def drifting_mixture(steps: int, n_per_step: int, k: int = 8, dim: int = 8,
 
 
 def contaminate(x: np.ndarray, frac: float = 0.01, scale: float = 50.0,
-                seed: int = 7) -> Tuple[np.ndarray, np.ndarray]:
+                seed: int = 7, geometry: str = "isotropic",
+                n_clumps: int = 3) -> Tuple[np.ndarray, np.ndarray]:
     """Inject gross outliers: returns (x_contaminated, inlier_mask).
 
-    Outliers are drawn isotropically at ``scale`` times the data's RMS
-    radius and appended, then the array is shuffled; ``inlier_mask``
+    ``geometry`` picks the contamination shape, both at ``scale`` times
+    the data's RMS radius:
+
+    * ``"isotropic"`` — independent draws around the data mean; the
+      diffuse-noise regime every trimming rule handles best.
+    * ``"clustered"`` — the outliers concentrate into ``n_clumps`` tight
+      clumps at far positions. Adversarial for robust methods: a clump
+      is locally indistinguishable from a (tiny, far) genuine cluster,
+      so it attracts centers unless the trim mass covers whole clumps.
+
+    Outliers are appended and the array is shuffled; ``inlier_mask``
     marks the original points (evaluate cost on ``x[mask]`` to measure
     robustness the way tests/test_ft.py does).
     """
+    if geometry not in ("isotropic", "clustered"):
+        raise ValueError(f"contaminate geometry must be 'isotropic' or "
+                         f"'clustered', got {geometry!r}")
     rng = np.random.default_rng(seed)
     n, d = x.shape
     n_out = max(int(round(frac * n)), 1)
     radius = float(np.sqrt(np.mean(np.sum(
         (x - x.mean(axis=0)) ** 2, axis=1))))
-    outliers = x.mean(axis=0) + rng.normal(
-        0.0, scale * max(radius, 1e-6), size=(n_out, d))
+    r = scale * max(radius, 1e-6)
+    if geometry == "isotropic":
+        outliers = x.mean(axis=0) + rng.normal(0.0, r, size=(n_out, d))
+    else:
+        clumps = x.mean(axis=0) + rng.normal(
+            0.0, r, size=(min(n_clumps, n_out), d))
+        assign = rng.integers(0, clumps.shape[0], size=n_out)
+        # clump spread ~ the inlier RMS radius: tight enough to look
+        # like a genuine far cluster, wide enough to not be duplicates
+        outliers = clumps[assign] + rng.normal(
+            0.0, max(radius, 1e-6), size=(n_out, d))
     x_all = np.concatenate([x, outliers.astype(np.float32)])
     mask = np.concatenate([np.ones((n,), bool), np.zeros((n_out,), bool)])
     order = rng.permutation(n + n_out)

@@ -32,6 +32,11 @@ ref-vs-pallas by tests/test_kernel_conformance.py — ``make test-kernels``):
     per-center cluster masses and the total cost of the bicriteria
     centers in one sweep of ``x`` (replaces a min_dist ->
     lloyd_reduce-counts -> cost-reduction chain).
+  * ``truncated_cost(x, w, c, v, c_valid)`` — fused threshold-split
+    truncated cost (repro.robust): ONE sweep of ``x`` splits the
+    weighted cost of ``c`` at the distance threshold ``v`` into
+    (kept cost, tail mass, tail cost) without materializing the (n,)
+    distance array — the (k, z)-objective scoring pass.
 
 Shape guards: feature dims above ``_MAX_PALLAS_D`` fall back to the XLA
 oracle path. Center counts above ``_MAX_PALLAS_K`` no longer fall back:
@@ -61,6 +66,7 @@ from repro.kernels.fused_lloyd import (fused_assign_reduce_chunked_pallas,
 from repro.kernels.lloyd import lloyd_reduce_pallas
 from repro.kernels.min_dist import min_dist_pallas
 from repro.kernels.sensitivity import sensitivity_scores_pallas
+from repro.kernels.truncated import truncated_cost_pallas
 
 _MAX_PALLAS_D = 512   # larger feature dims fall back to the XLA path
 _MAX_PALLAS_K = 1024  # fused kernels keep all centers in VMEM up to this;
@@ -72,7 +78,8 @@ _PIPELINE_MIN_N = 32768  # walks this long switch to the double-buffered
 
 # The public kernel surface; the conformance harness iterates over this.
 ENTRY_POINTS = ("min_dist", "lloyd_reduce", "fused_assign_reduce",
-                "remove_below", "update_min_dist", "sensitivity_scores")
+                "remove_below", "update_min_dist", "sensitivity_scores",
+                "truncated_cost")
 
 
 def _backend(explicit: Optional[str]) -> str:
@@ -216,3 +223,33 @@ def sensitivity_scores(x: jax.Array, w: jax.Array, c: jax.Array,
         d2, assign = min_dist_pallas(x, c, c_valid, interpret=interpret)
         return ref.sensitivity_from_min(w, d2, assign, c.shape[0])
     return ref.sensitivity_scores_ref(x, w, c, c_valid)
+
+
+def truncated_cost(x: jax.Array, w: jax.Array, c: jax.Array, v: jax.Array,
+                   c_valid: Optional[jax.Array] = None,
+                   *, backend: Optional[str] = None
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused truncated-cost split: (() kept cost of points with
+    min-d2 <= v, () tail weight mass above v, () tail cost above v).
+
+    The robust tier's scoring pass (repro.robust): one HBM sweep of
+    ``x`` with the center set resident — nothing (n,)-sized is written
+    back, so evaluating a (k, z) objective over the full data costs the
+    same traffic as a removal pass. Per-machine triples psum into the
+    global split (all three terms are plain sums). Center sets beyond
+    ``_MAX_PALLAS_K`` never arise on the robust path (the final center
+    set has k rows), so instead of a chunked twin the sweep runs through
+    the tiled ``min_dist`` kernel with the (n,)-sized tail in XLA.
+    Requires at least one valid center (like ``sensitivity_scores``);
+    with all centers invalid the oracle's +inf and the kernel's finite
+    sentinel land the tail on different sides of ``v``.
+    """
+    b = _backend(backend)
+    if b == "pallas" and x.shape[-1] <= _MAX_PALLAS_D:
+        interpret = jax.default_backend() != "tpu"
+        if c.shape[0] <= _MAX_PALLAS_K:
+            return truncated_cost_pallas(x, w, c, v, c_valid,
+                                         interpret=interpret)
+        d2, _ = min_dist_pallas(x, c, c_valid, interpret=interpret)
+        return ref.truncated_from_min(w, d2, v)
+    return ref.truncated_cost_ref(x, w, c, v, c_valid)

@@ -155,6 +155,56 @@ def sensitivity_scores_ref(x: jax.Array, w: jax.Array, c: jax.Array,
     return sensitivity_from_min(w, d2, assign, c.shape[0])
 
 
+def truncated_from_min(w: jax.Array, d2: jax.Array, v: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(kept_cost, tail_mass, tail_cost) from a completed min-distance
+    pass — the shared tail of the truncated-cost oracle and the chunked-K
+    dispatch path in ``kernels/ops.py`` (everything here is (n,)-sized).
+    """
+    wf = w.astype(jnp.float32)
+    s = jnp.where(wf > 0, wf * d2.astype(jnp.float32), 0.0)
+    below = d2 <= v
+    kept_cost = jnp.sum(jnp.where(below, s, 0.0))
+    tail_mass = jnp.sum(jnp.where(below, 0.0, wf))
+    tail_cost = jnp.sum(jnp.where(below, 0.0, s))
+    return kept_cost, tail_mass, tail_cost
+
+
+def truncated_cost_ref(x: jax.Array, w: jax.Array, c: jax.Array,
+                       v: jax.Array,
+                       c_valid: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused threshold-split truncated-cost pass.
+
+    The robust ((k, z)-means) tier's scoring statistic: one sweep of
+    ``x`` splits the weighted cost of ``c`` at the distance threshold
+    ``v`` — kept cost below, (mass, cost) of the tail above — without
+    ever materializing the (n,) distance array for a sort. Summing the
+    per-machine triples over a psum yields the global truncated cost and
+    the weight mass the threshold would trim (repro.robust).
+
+    Requires at least one valid center (like ``sensitivity_scores_ref``):
+    with all centers invalid the oracle's +inf distances and the Pallas
+    kernel's finite sentinel land the tail on different sides of any
+    finite ``v``.
+
+    Args:
+      x: (n, d) points.
+      w: (n,) float weights (0 for padded rows — they contribute to
+         neither side regardless of where their distance lands).
+      c: (k, d) centers.
+      v: () distance threshold (squared units, inclusive below).
+      c_valid: optional (k,) bool mask; invalid centers are ignored.
+
+    Returns:
+      kept_cost: () float32 — sum of w·d2 over points with d2 <= v.
+      tail_mass: () float32 — sum of w over points with d2 > v.
+      tail_cost: () float32 — sum of w·d2 over points with d2 > v.
+    """
+    d2, _ = min_dist_ref(x, c, c_valid)
+    return truncated_from_min(w, d2, v)
+
+
 def lloyd_reduce_ref(x: jax.Array, w: jax.Array, assign: jax.Array,
                      k: int) -> Tuple[jax.Array, jax.Array]:
     """Weighted per-center accumulation for one Lloyd step.

@@ -1,0 +1,12 @@
+"""Outlier-robust ((k, z)-means) clustering tier.
+
+``kzmeans`` — the one-round distributed (k, z)-means baseline with
+per-machine outlier pre-aggregation — registers with ``repro.api`` on
+import (the facade imports this package, so ``fit(algo="kzmeans")``
+works out of the box). The truncated-cost machinery it shares with
+robust SOCCER lives in ``repro.core.truncated_cost`` and the fused
+scoring kernel in ``repro.kernels`` (``ops.truncated_cost``).
+"""
+from repro.robust.kzmeans import fit_kzmeans
+
+__all__ = ["fit_kzmeans"]

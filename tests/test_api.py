@@ -21,10 +21,12 @@ TINY = {
     "lloyd": dict(iters=5),
     "minibatch": dict(batch=128, steps=10),
     "coreset_kmeans": dict(coreset_size=512, lloyd_iters=5),
+    "kzmeans": dict(coreset_size=512, lloyd_iters=5, outlier_frac=0.02),
 }
 # upper bound on communication rounds for each algorithm at TINY params
 MAX_ROUNDS = {"soccer": 7 + 1, "kmeans_parallel": 2, "eim11": 3,
-              "lloyd": 1, "minibatch": 1, "coreset_kmeans": 1}
+              "lloyd": 1, "minibatch": 1, "coreset_kmeans": 1,
+              "kzmeans": 1}
 
 
 @pytest.fixture(scope="module")

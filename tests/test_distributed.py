@@ -63,7 +63,9 @@ tiny = {"soccer": dict(epsilon=0.2),
         "eim11": dict(epsilon=0.2, max_rounds=3),
         "lloyd": dict(iters=5),
         "minibatch": dict(batch=128, steps=10),
-        "coreset_kmeans": dict(coreset_size=512, lloyd_iters=5)}
+        "coreset_kmeans": dict(coreset_size=512, lloyd_iters=5),
+        "kzmeans": dict(coreset_size=512, lloyd_iters=5,
+                        outlier_frac=0.02)}
 mesh_ok, mesh_det = {}, {}
 for algo in list_algorithms():
     r = fit(parts, 5, algo=algo, backend=MeshBackend(mesh), seed=4,
@@ -119,7 +121,7 @@ def test_virtual_equals_mesh_subprocess():
     # facade == legacy, bit-identical on both backends
     assert out["facade_virtual_identical"]
     assert out["facade_mesh_identical"]
-    # all six algorithms produce finite results on the mesh backend
+    # every registered algorithm produces finite results on the mesh
     assert all(out["mesh_algos"].values()), out["mesh_algos"]
     # same seed -> bit-identical centers on the mesh backend
     assert all(out["mesh_determinism"].values()), out["mesh_determinism"]

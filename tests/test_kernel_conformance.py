@@ -182,6 +182,32 @@ def test_sensitivity_scores_conforms(name, n, d, k, dtype):
                                    rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("name,n,d,k", POINT_SHAPES, ids=IDS)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16", "f16"])
+def test_truncated_cost_conforms(name, n, d, k, dtype):
+    """Robust-tier truncated-cost split against the oracle over the full
+    boundary grid. Thresholds sit strictly between sorted d2 values (the
+    backends sum distance terms in different orders, so a v equal to a
+    point's exact d2 could flip its side by one ulp) plus the two
+    degenerate extremes (everything tail / everything kept)."""
+    x, w, c, valid = _data(n, d, k, dtype, seed=7 * n + d + k)
+    tol, _ = _tols(dtype)
+    for cv in (None, valid):
+        d2, _ = ref.min_dist_ref(x, c, cv)
+        d2s = jnp.sort(d2)
+        mid = 0.5 * (d2s[n // 2] + d2s[min(n // 2 + 1, n - 1)] + 1e-6)
+        for v in [jnp.float32(-1.0), mid, jnp.max(d2) * 1.01 + 1.0]:
+            kc_r, tm_r, tc_r = ref.truncated_cost_ref(x, w, c, v, cv)
+            kc_o, tm_o, tc_o = ops.truncated_cost(x, w, c, v, cv)
+            np.testing.assert_allclose(kc_o, kc_r, rtol=tol, atol=tol)
+            np.testing.assert_allclose(tm_o, tm_r, rtol=tol, atol=tol)
+            np.testing.assert_allclose(tc_o, tc_r, rtol=tol, atol=tol)
+        # conservation at any v: kept + tail cost == total weighted cost
+        total = jnp.sum(jnp.where(w > 0, w * d2, 0.0))
+        kc_o, _, tc_o = ops.truncated_cost(x, w, c, mid, cv)
+        np.testing.assert_allclose(kc_o + tc_o, total, rtol=tol, atol=tol)
+
+
 def test_update_min_dist_large_block():
     """A new-center block over _MAX_PALLAS_K (k-means‖ seeding's ~6·k-row
     candidate buffer at large k_plus) runs as sliced resident sweeps on
@@ -255,6 +281,8 @@ def test_all_zero_weights(name, n, d, k):
     assert float(jnp.max(jnp.abs(scores))) == 0.0
     assert float(jnp.max(jnp.abs(smass))) == 0.0
     assert float(cost) == 0.0
+    kc, tm, tc = ops.truncated_cost(x, w0, c, jnp.float32(1.0))
+    assert float(kc) == 0.0 and float(tm) == 0.0 and float(tc) == 0.0
 
 
 # ---- pipelined / single-walk variants ---------------------------------
@@ -392,5 +420,6 @@ def test_every_entry_point_covered():
               and getattr(fn, "__module__", "") == ops.__name__
               and "backend" in inspect.signature(fn).parameters}
     covered = {"min_dist", "lloyd_reduce", "fused_assign_reduce",
-               "remove_below", "update_min_dist", "sensitivity_scores"}
+               "remove_below", "update_min_dist", "sensitivity_scores",
+               "truncated_cost"}
     assert public == set(ops.ENTRY_POINTS) == covered

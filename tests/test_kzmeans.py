@@ -1,0 +1,102 @@
+"""kzmeans — one-round distributed (k, z)-means: budget carving, the
+robust-beats-plain acceptance on contaminated data, honest objective
+accounting, and validation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import fit, list_algorithms
+from repro.configs.soccer_paper import GaussianMixtureSpec
+from repro.core.metrics import centralized_cost
+from repro.data.synthetic import contaminate, gaussian_mixture
+
+M, K = 8, 5
+FRAC = 0.02
+BUDGET = 1600          # total uplink rows, both conditions
+
+
+@pytest.fixture(scope="module")
+def contaminated():
+    spec = GaussianMixtureSpec(n=6_000, dim=8, k=K, sigma=0.001, seed=11)
+    x, _, means = gaussian_mixture(spec)
+    xc, mask = contaminate(x, frac=FRAC, scale=50.0, seed=3)
+    return xc, mask, means
+
+
+@pytest.fixture(scope="module")
+def fits(contaminated):
+    xc, _, _ = contaminated
+    return {frac: fit(xc, K, algo="kzmeans", backend="virtual", m=M,
+                      coreset_size=BUDGET, lloyd_iters=10,
+                      outlier_frac=frac, seed=0)
+            for frac in (0.0, FRAC)}
+
+
+def test_registered():
+    assert "kzmeans" in list_algorithms()
+
+
+def test_robust_beats_plain_on_inliers(contaminated, fits):
+    """THE acceptance property: at equal uplink budget, outlier_frac
+    set to the injected rate keeps the inlier cost near-optimal while
+    the plain fit is dragged by the contamination."""
+    xc, mask, means = contaminated
+    inliers = jnp.asarray(xc[mask])
+    ref = float(centralized_cost(inliers, jnp.asarray(means)))
+    costs = {f: float(centralized_cost(inliers, jnp.asarray(r.centers)))
+             for f, r in fits.items()}
+    assert not np.array_equal(fits[0.0].centers, fits[FRAC].centers)
+    assert costs[FRAC] <= 3.0 * ref, costs
+    # measured gap is ~1e4x; 100x keeps the assertion far from seed noise
+    assert costs[FRAC] < 0.01 * costs[0.0], costs
+
+
+def test_budget_carving_keeps_uplink_equal(fits):
+    """The clusterz candidate rows are carved OUT of coreset_size, so
+    the robust condition ships exactly the same rows (and bytes) as the
+    plain one — fits compare at equal communication."""
+    d = fits[0.0].centers.shape[1]
+    for frac, res in fits.items():
+        assert res.rounds == 1
+        assert np.array_equal(res.uplink_points, [BUDGET]), frac
+        assert np.array_equal(res.uplink_bytes, [BUDGET * d * 4]), frac
+        e = res.extra
+        assert (e["coreset_rows_per_machine"]
+                + e["candidate_rows_per_machine"]) * M == BUDGET
+    assert fits[0.0].extra["candidate_rows_per_machine"] == 0
+    assert fits[FRAC].extra["candidate_rows_per_machine"] > 0
+
+
+def test_kz_objective_accounting(contaminated, fits):
+    """kz_cost + trimmed_cost must equal the full (untrimmed) cost of
+    the returned centers on ALL the data — the fused truncated_cost
+    sweep partitions, it never drops mass — and the trimmed mass must
+    realize (approximately) the requested z = outlier_frac·n."""
+    xc, _, _ = contaminated
+    res = fits[FRAC]
+    e = res.extra
+    total = float(centralized_cost(jnp.asarray(xc),
+                                   jnp.asarray(res.centers)))
+    np.testing.assert_allclose(e["kz_cost"] + e["trimmed_cost"], total,
+                               rtol=1e-4)
+    z_mass = FRAC * xc.shape[0]
+    assert 0.5 * z_mass <= e["trimmed_mass"] <= z_mass + 1.0
+    # the threshold is real: the kept cost excludes the far mass
+    assert e["kz_cost"] < 1e-3 * total
+    # plain run: nothing trimmed, threshold effectively infinite
+    e0 = fits[0.0].extra
+    assert e0["trimmed_mass"] == 0.0 and e0["trimmed_cost"] == 0.0
+
+
+def test_validation():
+    x = np.zeros((256, 3), np.float32)
+    with pytest.raises(ValueError, match="outlier_frac"):
+        fit(x, 2, algo="kzmeans", m=4, outlier_frac=1.0)
+    with pytest.raises(ValueError, match="outlier_frac"):
+        fit(x, 2, algo="kzmeans", m=4, outlier_frac=-0.1)
+    with pytest.raises(ValueError, match="uplink_mode"):
+        fit(x, 2, algo="kzmeans", m=4, uplink_mode="points")
+    # the validated no-op spelling is accepted
+    res = fit(x, 2, algo="kzmeans", m=4, uplink_mode="coreset",
+              coreset_size=64, lloyd_iters=2)
+    assert res.rounds == 1

@@ -16,7 +16,8 @@ from repro.scenarios import (Condition, Scenario, ScenarioData,
                              summarize_gap)
 
 REQUIRED = {"zipf_gaussian", "adversarial_kmeanspar", "heavy_tailed",
-            "outlier_contaminated", "imbalanced_shards", "noniid_shards",
+            "outlier_contaminated", "outlier_heavy", "outlier_clustered",
+            "imbalanced_shards", "noniid_shards",
             "faulty_cluster", "bf16_uplink", "coreset_budget",
             "int8_coreset"}
 

@@ -1,12 +1,20 @@
-"""Weighted l-truncated cost vs a naive oracle + hypothesis properties."""
+"""Weighted l-truncated cost: naive-oracle agreement, partition /
+degenerate / permutation / trim properties, and threshold scaling.
+
+The randomized-oracle tests use hypothesis when available (optional dev
+dep, requirements-dev.txt); the property tests below them are plain
+seed-parametrized pytest so they run everywhere.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # optional dev dep
+    given = None
 
-from repro.core.truncated_cost import (removal_threshold,
+from repro.core.truncated_cost import (removal_threshold, trim_top_mass,
                                        weighted_top_mass,
                                        weighted_truncated_cost)
 
@@ -23,40 +31,128 @@ def naive_truncated(d2, w, mass):
     return total
 
 
-@settings(max_examples=60, deadline=None)
-@given(
-    n=st.integers(1, 60),
-    mass_frac=st.floats(0.0, 1.5),
-    seed=st.integers(0, 999),
-)
-def test_matches_naive_oracle(n, mass_frac, seed):
-    rng = np.random.default_rng(seed)
-    d2 = rng.random(n).astype(np.float32) * 10
-    w = rng.random(n).astype(np.float32) + 0.01
-    mass = np.float32(mass_frac * w.sum())
-    got = float(weighted_truncated_cost(jnp.asarray(d2), jnp.asarray(w),
-                                        jnp.asarray(mass)))
-    want = naive_truncated(d2, w, float(mass))
-    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+if given is not None:
+    @settings(max_examples=60, deadline=None)
+    @given(
+        n=st.integers(1, 60),
+        mass_frac=st.floats(0.0, 1.5),
+        seed=st.integers(0, 999),
+    )
+    def test_matches_naive_oracle(n, mass_frac, seed):
+        rng = np.random.default_rng(seed)
+        d2 = rng.random(n).astype(np.float32) * 10
+        w = rng.random(n).astype(np.float32) + 0.01
+        mass = np.float32(mass_frac * w.sum())
+        got = float(weighted_truncated_cost(jnp.asarray(d2),
+                                            jnp.asarray(w),
+                                            jnp.asarray(mass)))
+        want = naive_truncated(d2, w, float(mass))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 999))
+    def test_truncation_properties(seed):
+        rng = np.random.default_rng(seed)
+        n = 40
+        d2 = jnp.asarray(rng.random(n) * 5, jnp.float32)
+        w = jnp.asarray(rng.random(n) + 0.01, jnp.float32)
+        full = float(jnp.sum(w * d2))
+        c0 = float(weighted_truncated_cost(d2, w, jnp.float32(0.0)))
+        c1 = float(weighted_truncated_cost(d2, w, jnp.float32(1.0)))
+        c_all = float(weighted_truncated_cost(d2, w, jnp.sum(w)))
+        np.testing.assert_allclose(c0, full, rtol=1e-4)
+        assert c1 <= c0 + 1e-5, "monotone non-increasing in mass"
+        assert c_all <= 1e-4, "dropping everything leaves zero cost"
+        # top + truncated == total
+        top = float(weighted_top_mass(d2, w, jnp.float32(1.0)))
+        np.testing.assert_allclose(top + c1, full, rtol=1e-3)
 
 
-@settings(max_examples=40, deadline=None)
-@given(seed=st.integers(0, 999))
-def test_truncation_properties(seed):
+# ------------------------------------------ hypothesis-free properties
+@pytest.mark.parametrize("seed", range(20))
+def test_top_plus_truncated_is_total_at_fractional_boundary(seed):
+    """For ANY mass — in particular one cutting a point fractionally —
+    the top-mass cost and the truncated cost partition the total
+    exactly: the boundary point's weight is split, never dropped or
+    double-counted."""
     rng = np.random.default_rng(seed)
-    n = 40
-    d2 = jnp.asarray(rng.random(n) * 5, jnp.float32)
+    n = int(rng.integers(1, 50))
+    d2 = jnp.asarray(rng.random(n) * 8, jnp.float32)
     w = jnp.asarray(rng.random(n) + 0.01, jnp.float32)
-    full = float(jnp.sum(w * d2))
-    c0 = float(weighted_truncated_cost(d2, w, jnp.float32(0.0)))
-    c1 = float(weighted_truncated_cost(d2, w, jnp.float32(1.0)))
-    c_all = float(weighted_truncated_cost(d2, w, jnp.sum(w)))
-    np.testing.assert_allclose(c0, full, rtol=1e-4)
-    assert c1 <= c0 + 1e-5, "monotone non-increasing in mass"
-    assert c_all <= 1e-4, "dropping everything leaves zero cost"
-    # top + truncated == total
-    top = float(weighted_top_mass(d2, w, jnp.float32(1.0)))
-    np.testing.assert_allclose(top + c1, full, rtol=1e-3)
+    # strictly interior cut, lands inside a point's weight w.p. 1
+    mass = jnp.float32(rng.uniform(0.01, 0.99)) * jnp.sum(w)
+    total = float(jnp.sum(w * d2))
+    top = float(weighted_top_mass(d2, w, mass))
+    trunc = float(weighted_truncated_cost(d2, w, mass))
+    np.testing.assert_allclose(top + trunc, total, rtol=1e-4, atol=1e-6)
+    assert 0.0 <= top <= total + 1e-5 and 0.0 <= trunc <= total + 1e-5
+
+
+def test_zero_and_all_mass_degenerates():
+    rng = np.random.default_rng(4)
+    d2 = jnp.asarray(rng.random(30) * 3, jnp.float32)
+    w = jnp.asarray(rng.random(30) + 0.01, jnp.float32)
+    total = float(jnp.sum(w * d2))
+    zero = jnp.float32(0.0)
+    everything = jnp.sum(w) * 2.0          # > total mass: clips, no NaN
+    np.testing.assert_allclose(
+        float(weighted_truncated_cost(d2, w, zero)), total, rtol=1e-5)
+    assert float(weighted_top_mass(d2, w, zero)) == 0.0
+    assert float(weighted_truncated_cost(d2, w, everything)) == 0.0
+    np.testing.assert_allclose(
+        float(weighted_top_mass(d2, w, everything)), total, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(trim_top_mass(d2, w, zero)),
+                               np.asarray(w), rtol=1e-6)
+    assert np.all(np.asarray(trim_top_mass(d2, w, everything)) == 0.0)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_permutation_invariance(seed):
+    """The statistics depend on (d2, w) as a multiset; trim_top_mass is
+    permutation-EQUIvariant (it returns per-point weights in the
+    original order)."""
+    rng = np.random.default_rng(100 + seed)
+    n = 35
+    d2 = rng.random(n).astype(np.float32) * 7   # continuous: no ties
+    w = rng.random(n).astype(np.float32) + 0.01
+    mass = jnp.float32(0.3 * w.sum())
+    perm = rng.permutation(n)
+    for fn in (weighted_truncated_cost, weighted_top_mass):
+        a = float(fn(jnp.asarray(d2), jnp.asarray(w), mass))
+        b = float(fn(jnp.asarray(d2[perm]), jnp.asarray(w[perm]), mass))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    kept = np.asarray(trim_top_mass(jnp.asarray(d2), jnp.asarray(w), mass))
+    kept_p = np.asarray(trim_top_mass(jnp.asarray(d2[perm]),
+                                      jnp.asarray(w[perm]), mass))
+    np.testing.assert_allclose(kept_p, kept[perm], rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_trim_top_mass_properties(seed):
+    """The per-point trim: bounded by w, drops exactly min(mass, sum w),
+    agrees with the scalar statistic, and only ever touches the
+    highest-d2 end."""
+    rng = np.random.default_rng(200 + seed)
+    n = int(rng.integers(1, 50))
+    d2 = rng.random(n).astype(np.float32) * 5
+    w = rng.random(n).astype(np.float32) + 0.01
+    mass = np.float32(rng.uniform(0.0, 1.5) * w.sum())
+    kept = np.asarray(trim_top_mass(jnp.asarray(d2), jnp.asarray(w),
+                                    jnp.asarray(mass)))
+    assert np.all(kept >= -1e-6) and np.all(kept <= w + 1e-6)
+    np.testing.assert_allclose(w.sum() - kept.sum(),
+                               min(float(mass), float(w.sum())),
+                               rtol=1e-4, atol=1e-4)
+    want = float(weighted_truncated_cost(jnp.asarray(d2), jnp.asarray(w),
+                                         jnp.asarray(mass)))
+    np.testing.assert_allclose(float((kept * d2).sum()), want,
+                               rtol=1e-4, atol=1e-4)
+    # the trim is a top-end prefix: every point strictly below the
+    # lowest TRIMMED d2 keeps its full weight
+    trimmed = kept < w - 1e-5
+    if trimmed.any():
+        boundary = d2[trimmed].min()
+        assert np.all(kept[d2 < boundary] == w[d2 < boundary])
 
 
 def test_threshold_scaling():

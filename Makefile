@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all test-kernels test-mesh smoke bench-kernels bench scenarios lint autotune stream-demo
+.PHONY: test test-all test-kernels test-mesh smoke bench-kernels bench scenarios lint autotune stream-demo trace-demo
 
 smoke:           ## quickstart example + one fit() per registered algorithm
 	$(PYTHON) examples/quickstart.py
@@ -36,6 +36,9 @@ scenarios:       ## quick paper-suite scenario sweep -> BENCH_scenarios.json
 
 stream-demo:     ## streaming fold/warm-start/serve loop on a drifting mixture
 	$(PYTHON) examples/streaming_clustering.py
+
+trace-demo:      ## quickstart with trace="full" + the per-round run report
+	$(PYTHON) examples/quickstart.py --trace
 
 lint:            ## CI lint job (critical rules only; config in ruff.toml)
 	ruff check src tests benchmarks

@@ -1,7 +1,12 @@
 """Quickstart: distributed k-means through the unified API in ~15 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Add ``--trace`` to run the same fit with trace="full" and print the
+per-round telemetry report (``make trace-demo``).
 """
+import sys
+
 import jax.numpy as jnp
 
 from repro.api import fit
@@ -10,13 +15,14 @@ from repro.core.metrics import centralized_cost
 from repro.data.synthetic import gaussian_mixture
 
 
-def main():
+def main(trace: bool = False):
     # 100k points from a 25-Gaussian mixture (the paper's synthetic setup)
     spec = GaussianMixtureSpec(n=100_000, dim=15, k=25, sigma=0.001)
     x, _, means = gaussian_mixture(spec)
 
     # partition across 8 "machines" and run SOCCER
-    result = fit(x, k=25, algo="soccer", backend="auto", m=8, epsilon=0.1)
+    result = fit(x, k=25, algo="soccer", backend="auto", m=8, epsilon=0.1,
+                 trace="full" if trace else None)
 
     const = result.extra["const"]
     cost = result.cost(x)
@@ -31,7 +37,11 @@ def main():
           f"coordinator capacity eta={const.eta})")
     print(f"k-means cost:       {cost:.4f}  (optimal ~{opt:.4f}, "
           f"ratio {cost/opt:.2f}x)")
+    if trace:
+        from repro.obs.report import format_summary
+        print()
+        print(format_summary(result.extra["trace"]))
 
 
 if __name__ == "__main__":
-    main()
+    main(trace="--trace" in sys.argv[1:])

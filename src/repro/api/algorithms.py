@@ -164,13 +164,32 @@ def _fit_central(method: str, x_parts, k, backend, key, w, alive, seed,
         return kmeans(kk, xa, wa, k, **bb_kw)
 
     from repro.core.comm import WireTally, wire_tally
+    from repro.obs.trace import clock, current_trace, timed_compile
     fn = backend.compile(central, ("rep", "machine", "machine"),
                          ("rep", "rep"))
     t = WireTally()
-    with wire_tally(t):
-        centers, cost = fn(key, x, w_dev)
+    trace = current_trace()
+    if trace is None:
+        with wire_tally(t):
+            centers, cost = fn(key, x, w_dev)
+        wall_s = compile_s = None
+    else:
+        with wire_tally(t):
+            fn, compile_s = timed_compile(fn, key, x, w_dev)
+            t0 = clock()
+            centers, cost = fn(key, x, w_dev)
+            jax.block_until_ready(centers)
+            wall_s = clock() - t0
     n_up = int(np.sum(w_np > 0))
     up = np.asarray([n_up], np.int64)
+    if trace is not None:
+        # the whole algorithm is one gather + one black-box call: a
+        # single phase="upload" record carries its entire telemetry
+        trace.emit_round(
+            round=1, phase="upload", n_live=n_up, uplink_rows=n_up,
+            wire_payload_bytes=t.payload, wire_meta_bytes=t.meta,
+            wall_s=wall_s, compile_s=compile_s)
+        trace.stop_reason = "one_shot"
     return ClusterResult(
         centers=np.asarray(centers), k=k, algo=method,
         backend=backend.name, rounds=1, uplink_points=up,

@@ -18,7 +18,6 @@ straggler deadlines through the host loop's ``on_round`` hook.
 """
 from __future__ import annotations
 
-import time
 from typing import Optional
 
 import jax
@@ -27,6 +26,7 @@ import numpy as np
 from repro.api.backends import resolve_backend
 from repro.api.registry import get_algorithm
 from repro.api.result import ClusterResult
+from repro.obs import trace as obs_trace
 
 
 def _as_parts(x: np.ndarray, w, m: int, seed: int, policy):
@@ -63,7 +63,7 @@ def fit(x, k: int, algo: str = "soccer", backend="auto", *,
         m: Optional[int] = None, w=None, key: Optional[jax.Array] = None,
         seed: int = 0, shuffle: bool = True, shard_policy=None,
         uplink_dtype=None, uplink_wire=None, uplink_mode=None,
-        failure_plan=None, **algo_params) -> ClusterResult:
+        failure_plan=None, trace=None, **algo_params) -> ClusterResult:
     """Cluster ``x`` into ``k`` groups with any registered algorithm.
 
     Args:
@@ -106,6 +106,14 @@ def fit(x, k: int, algo: str = "soccer", backend="auto", *,
       failure_plan: a ``repro.ft.failures.FailurePlan`` injecting machine
         deaths / straggler deadlines (algorithms with an ``on_round``
         hook only, i.e. SOCCER).
+      trace: observability knob (``repro.obs``). ``None``/"off"
+        (default) — no tracing, provably zero allocation; "rounds" —
+        per-round structured records (live count, realized alpha,
+        removal threshold, stopping-rule margin, uplink rows, achieved
+        wire bytes, wall/compile split) land in
+        ``result.extra["trace"]``; "full" — additionally records
+        span/event timelines for the Chrome-trace/Perfetto export
+        (``repro.obs.export``, ``python -m repro.obs.report``).
       **algo_params: algorithm-specific knobs (e.g. ``epsilon`` for
         soccer, ``rounds`` for kmeans_parallel); unknown names raise.
 
@@ -165,10 +173,25 @@ def fit(x, k: int, algo: str = "soccer", backend="auto", *,
             algo_params.setdefault("straggler_rate",
                                    failure_plan.straggler_rate)
 
-    t0 = time.perf_counter()
-    res = driver(parts, k, backend=bk, key=key, w=w_parts,
-                 alive=alive_parts, seed=seed, **algo_params)
-    res.wall_time_s = time.perf_counter() - t0
+    rt = None
+    if trace not in (None, False, "off"):
+        rt = obs_trace.RunTrace(mode=trace, meta=dict(
+            algo=algo, backend=type(bk).__name__, k=k, m=m, seed=seed))
+
+    # every fit is timed by the one obs clock (repro.obs.trace.clock) so
+    # bench walls and trace walls can never come from different timers
+    t0 = obs_trace.clock()
+    if rt is None:
+        res = driver(parts, k, backend=bk, key=key, w=w_parts,
+                     alive=alive_parts, seed=seed, **algo_params)
+    else:
+        with obs_trace.run_trace(rt):
+            res = driver(parts, k, backend=bk, key=key, w=w_parts,
+                         alive=alive_parts, seed=seed, **algo_params)
+    res.wall_time_s = obs_trace.clock() - t0
+    if rt is not None:
+        rt.wall_s = res.wall_time_s
+        res.extra["trace"] = rt.summary()
     res.params = dict(k=k, m=m, seed=seed, **algo_params)
     if shard_policy is not None:
         res.params["shard_policy"] = getattr(policy, "__name__", policy)

@@ -25,6 +25,27 @@ _SMOKE_PARAMS = {
 }
 
 
+def _telemetry_screen(x, k: int, m: int) -> None:
+    """One-screen telemetry summary: a traced SOCCER fit rendered with
+    the shared ``repro.obs.report`` formatter plus the registry view."""
+    from repro.api.result import omega_mk_bytes
+    from repro.obs.metrics import REGISTRY
+    from repro.obs.report import format_summary
+    res = fit(x, k, algo="soccer", backend="virtual", m=m, seed=0,
+              trace="rounds", **_SMOKE_PARAMS["soccer"])
+    t = res.extra["trace"]
+    print()
+    print(format_summary(t))
+    omega = omega_mk_bytes(m, k, x.shape[-1])
+    wire = res.wire_bytes_total
+    print(f"wire_bytes_total={wire}  Omega(mk) floor={omega}  "
+          f"ratio={wire / max(omega, 1):.1f}x")
+    lines = REGISTRY.summary_lines(
+        "core.comm.active_tallies", "kernels.tuning.autotune",
+        "core.kmeans.trace_counts", "core.sharded_kmeans.trace_counts")
+    print("metrics: " + "; ".join(lines))
+
+
 def main(n: int = 2_000, d: int = 5, k: int = 4, m: int = 4) -> int:
     rng = np.random.default_rng(0)
     means = rng.uniform(size=(k, d)).astype(np.float32)
@@ -50,6 +71,11 @@ def main(n: int = 2_000, d: int = 5, k: int = 4, m: int = 4) -> int:
         except Exception as e:  # noqa: BLE001 — smoke reports all failures
             failures += 1
             print(f"smoke/{algo:16s} FAILED: {type(e).__name__}: {e}")
+    try:
+        _telemetry_screen(x, k, m)
+    except Exception as e:  # noqa: BLE001
+        failures += 1
+        print(f"smoke/telemetry       FAILED: {type(e).__name__}: {e}")
     return failures
 
 

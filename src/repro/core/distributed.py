@@ -34,7 +34,8 @@ def _state_specs(axes: Tuple[str, ...]) -> SoccerState:
     return SoccerState(
         x=P(axes, None, None), w=sharded2, alive=sharded2,
         machine_ok=P(axes), key=P(), round_idx=P(), n_remaining=P(),
-        centers=P(), centers_valid=P(), v_hist=P(), n_hist=P(), uplink=P())
+        centers=P(), centers_valid=P(), v_hist=P(), n_hist=P(), uplink=P(),
+        alpha_hist=P())
 
 
 def make_mesh_step(mesh: Mesh, const: SoccerConstants,

@@ -152,13 +152,30 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
     broadcast = 0
     n_rem = n
     from repro.core.comm import WireTally, wire_tally
+    from repro.obs.trace import clock, current_trace, timed_compile
     t_round, t_fin = WireTally(), WireTally()
+    trace = current_trace()
+    round_walls = []
+    compile_round = compile_fin = fin_wall = None
+    if trace is not None:
+        trace.meta.setdefault("capacity", s)
+        trace.meta.setdefault("max_rounds", max_rounds)
+        # AOT inside the tallies: lowering is where the wire is recorded
+        with wire_tally(t_round):
+            step, compile_round = timed_compile(
+                step, key, x, w, alive, centers, valid, jnp.int32(0))
+        with wire_tally(t_fin):
+            finalize, compile_fin = timed_compile(
+                finalize, key, x, w, alive, centers, valid, jnp.int32(0))
     while n_rem > s and rounds < max_rounds:
         kk, key = jax.random.split(key)
+        t0 = clock() if trace is not None else 0.0
         with wire_tally(t_round):
             alive, centers, valid, n_rem_a, up = step(
                 kk, x, w, alive, centers, valid, jnp.int32(rounds * s))
         n_rem = int(n_rem_a)
+        if trace is not None:
+            round_walls.append(clock() - t0)
         rounds += 1
         broadcast += int(np.asarray(valid).sum())  # coordinator re-broadcasts C
         n_hist.append(n_rem)
@@ -167,9 +184,13 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
     # final: survivors -> coordinator -> k-means; then weighted reduction
     kf, key = jax.random.split(key)
     base = min(rounds * s, rows - k)
+    t0 = clock() if trace is not None else 0.0
     with wire_tally(t_fin):
         final, real = finalize(kf, x, w, alive, centers, valid,
                                jnp.int32(base))
+    if trace is not None:
+        jax.block_until_ready(final)
+        fin_wall = clock() - t0
     uplink.append(int(real))
     up_arr = np.asarray(uplink, np.int64)
     wire_payload = np.concatenate(
@@ -178,6 +199,24 @@ def run_eim11(x_parts: jax.Array, k: int, epsilon: float, *,
     wire_meta = np.concatenate(
         [t_round.meta_bytes_at(up_arr[:rounds]),
          t_fin.meta_bytes_at(up_arr[rounds:])])
+    if trace is not None:
+        for r in range(1, rounds + 1):
+            trace.emit_round(
+                round=r, phase="round", n_live=n_hist[r - 1], capacity=s,
+                removed=n_hist[r - 1] - n_hist[r],
+                stop_ratio=n_hist[r] / s, stop_margin=n_hist[r] - s,
+                uplink_rows=up_arr[r - 1],
+                wire_payload_bytes=wire_payload[r - 1],
+                wire_meta_bytes=wire_meta[r - 1],
+                wall_s=round_walls[r - 1],
+                compile_s=compile_round if r == 1 else None)
+        trace.emit_round(
+            round=rounds + 1, phase="finalize", n_live=n_hist[rounds],
+            capacity=s, uplink_rows=up_arr[rounds],
+            wire_payload_bytes=wire_payload[rounds],
+            wire_meta_bytes=wire_meta[rounds],
+            wall_s=fin_wall, compile_s=compile_fin)
+        trace.stop_reason = "capacity" if n_rem <= s else "max_rounds"
     return EIM11Result(centers=np.asarray(final), rounds=rounds,
                        broadcast_points=broadcast,
                        n_hist=np.asarray(n_hist),

@@ -149,8 +149,11 @@ def run_kmeans_parallel(x_parts: jax.Array, k: int, rounds: int, *,
         ("machine", "machine", "rep", "rep"), "rep")
 
     from repro.core.comm import WireTally, wire_tally
+    from repro.obs.trace import clock, current_trace
     t_seed, t_body, t_counts = WireTally(), WireTally(), WireTally()
+    trace = current_trace()
     k0, key = jax.random.split(key)
+    t0 = clock() if trace is not None else 0.0
     with wire_tally(t_seed):
         centers, valid = seed_fn(k0, x, w)
     round_keys = jax.random.split(key, rounds + 1)
@@ -161,6 +164,7 @@ def run_kmeans_parallel(x_parts: jax.Array, k: int, rounds: int, *,
                                                 centers, valid)
     phi_hist = [float(p) for p in phis]
     sel_hist = [int(s) for s in nsels]
+    scan_wall = (clock() - t0) if trace is not None else None
 
     with wire_tally(t_counts):
         counts = counts_fn(x, w, centers, valid)
@@ -175,6 +179,22 @@ def run_kmeans_parallel(x_parts: jax.Array, k: int, rounds: int, *,
     wire_meta[0] += t_seed.meta
     wire_payload[-1] += t_counts.payload
     wire_meta[-1] += t_counts.meta
+    if trace is not None:
+        # all rounds ran inside ONE scan dispatch: wall_s is amortized
+        # over the rounds; fields k-means‖ has no notion of (alpha, v,
+        # live counts, stopping margins) stay None in the pinned schema
+        trace.meta.setdefault("rounds", rounds)
+        per_round_wall = (None if scan_wall is None or rounds == 0
+                          else scan_wall / rounds)
+        for r in range(1, max(rounds, 1) + 1):
+            trace.emit_round(
+                round=r, phase="round",
+                uplink_rows=(sel_hist[r - 1] + (1 if r == 1 else 0)
+                             if r <= len(sel_hist) else None),
+                wire_payload_bytes=wire_payload[r - 1],
+                wire_meta_bytes=wire_meta[r - 1],
+                wall_s=per_round_wall)
+        trace.stop_reason = "fixed_rounds"
     return KMeansParallelResult(
         centers=np.asarray(final),
         oversampled=np.asarray(centers)[np.asarray(valid)],

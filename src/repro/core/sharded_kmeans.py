@@ -176,10 +176,16 @@ def distributed_threshold(comm, pts, ws, c_iter, k: int, d_k: float,
     return psi * alpha / (k * d_k)
 
 
-def sharded_center_threshold(comm, const, key1, key2, key_bb, state,
-                             alive_eff, n_vec_r1, n_vec_r2, n_total
-                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Drop-in replacement for the gather->cluster->threshold sequence."""
+def sharded_center_threshold(
+        comm, const, key1, key2, key_bb, state, alive_eff, n_vec_r1,
+        n_vec_r2, n_total
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Drop-in replacement for the gather->cluster->threshold sequence.
+
+    Returns ``(c_iter, v, uplink_rows, alpha)`` — alpha rides along so
+    the round's telemetry record reports the realized P2 rate the
+    threshold was actually scaled by.
+    """
     p1, w1, real1 = draw_local_sample(
         comm, key1, state.x, state.w, alive_eff, n_vec_r1,
         const.eta, const.cap_sharded)
@@ -206,7 +212,7 @@ def sharded_center_threshold(comm, const, key1, key2, key_bb, state,
                               outlier_mass=outlier_mass,
                               extra_top=int(math.ceil(
                                   const.outlier_frac * const.eta)))
-    return c_iter, v, real1 + real2
+    return c_iter, v, real1 + real2, alpha
 
 
 def distributed_kmeans_parallel_seed(key, comm, pts, ws, k: int,

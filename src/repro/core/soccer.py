@@ -28,6 +28,7 @@ from jax import lax
 
 from repro.configs.soccer_paper import SoccerParams
 from repro.core.comm import WireTally, wire_tally
+from repro.obs.trace import clock, current_trace, timed_compile
 from repro.core.kmeans import kmeans
 from repro.core.minibatch import minibatch_kmeans
 from repro.core.sampling import draw_global_sample
@@ -129,6 +130,7 @@ class SoccerState(NamedTuple):
     v_hist: jax.Array        # (R,) thresholds
     n_hist: jax.Array        # (R,) N at the start of each round
     uplink: jax.Array        # (R,) realized points uploaded per round
+    alpha_hist: jax.Array    # (R,) realized P2 sampling rate per round
 
 
 def init_state(x_parts: jax.Array, const: SoccerConstants, key: jax.Array,
@@ -147,7 +149,8 @@ def init_state(x_parts: jax.Array, const: SoccerConstants, key: jax.Array,
         centers_valid=jnp.zeros((r, const.k_plus), bool),
         v_hist=jnp.zeros((r,), jnp.float32),
         n_hist=jnp.zeros((r,), jnp.int32),
-        uplink=jnp.zeros((r,), jnp.int32))
+        uplink=jnp.zeros((r,), jnp.int32),
+        alpha_hist=jnp.zeros((r,), jnp.float32))
 
 
 def _blackbox(const: SoccerConstants, key: jax.Array, x: jax.Array,
@@ -221,7 +224,7 @@ def soccer_round(state: SoccerState, comm, const: SoccerConstants
         # beyond-paper: samples stay sharded; collectives shrink from
         # O(eta*d) to O(k_plus*d*iters)  (see core/sharded_kmeans.py)
         from repro.core.sharded_kmeans import sharded_center_threshold
-        c_iter, v, uplink_pts = sharded_center_threshold(
+        c_iter, v, uplink_pts, alpha = sharded_center_threshold(
             comm, const, k_s1, k_s2, k_bb, state, alive_eff,
             n_vec_r1, n_vec_r2, n_total)
     else:
@@ -261,7 +264,8 @@ def soccer_round(state: SoccerState, comm, const: SoccerConstants
         centers=centers, centers_valid=centers_valid,
         v_hist=state.v_hist.at[i].set(v),
         n_hist=state.n_hist.at[i].set(n_total),
-        uplink=state.uplink.at[i].set(uplink_pts))
+        uplink=state.uplink.at[i].set(uplink_pts),
+        alpha_hist=state.alpha_hist.at[i].set(alpha))
 
 
 def soccer_finalize(state: SoccerState, comm, const: SoccerConstants
@@ -334,7 +338,8 @@ def flatten_centers(state: SoccerState) -> np.ndarray:
 STATE_MARKS = SoccerState(
     x="machine", w="machine", alive="machine", machine_ok="machine",
     key="rep", round_idx="rep", n_remaining="rep", centers="rep",
-    centers_valid="rep", v_hist="rep", n_hist="rep", uplink="rep")
+    centers_valid="rep", v_hist="rep", n_hist="rep", uplink="rep",
+    alpha_hist="rep")
 
 
 def effective_n(m: int, p: int, w: Optional[jax.Array],
@@ -413,16 +418,47 @@ def run_soccer(x_parts: jax.Array, params: SoccerParams, *,
     rounds = 0
     prev_n = math.inf
     t_round, t_fin = WireTally(), WireTally()
+    trace = current_trace()
+    round_walls = []
+    compile_round = compile_fin = fin_wall = None
+    if trace is not None:
+        trace.meta.setdefault("eta", const.eta)
+        trace.meta.setdefault("k", const.k)
+        trace.meta.setdefault("max_rounds", const.max_rounds)
+        # AOT-compile both programs up front so each round's wall_s is
+        # pure execution and compile_s is split out. The lowering traces
+        # the collectives, so it MUST run inside the same wire tally the
+        # first inline call would have recorded into; on backends without
+        # a working .lower the fallback leaves compile inline (absorbed
+        # into round 1's wall, exactly the untraced behavior).
+        with wire_tally(t_round):
+            step, compile_round = timed_compile(step, state)
+        with wire_tally(t_fin):
+            fin, compile_fin = timed_compile(fin, state)
     while rounds < const.max_rounds and stopping_rule(
             int(state.n_remaining), const.eta, prev_n):
         prev_n = int(state.n_remaining)
-        with wire_tally(t_round):   # records once, at the round's trace
-            state = step(state)
+        if trace is None:
+            with wire_tally(t_round):   # records once, at the round's trace
+                state = step(state)
+        else:
+            t0 = clock()
+            with wire_tally(t_round):
+                state = step(state)
+            jax.block_until_ready(state.n_remaining)
+            round_walls.append(clock() - t0)
         rounds += 1
         if on_round is not None:
             state = on_round(rounds, state) or state
-    with wire_tally(t_fin):
-        state = fin(state)
+    if trace is None:
+        with wire_tally(t_fin):
+            state = fin(state)
+    else:
+        t0 = clock()
+        with wire_tally(t_fin):
+            state = fin(state)
+        jax.block_until_ready(state.centers)
+        fin_wall = clock() - t0
 
     # achieved wire bytes: static per-trace payload + per-row widths of
     # the ragged channels x the realized row counts the state tracked
@@ -433,8 +469,57 @@ def run_soccer(x_parts: jax.Array, params: SoccerParams, *,
     wire_meta = np.concatenate(
         [t_round.meta_bytes_at(up[:rounds]),
          t_fin.meta_bytes_at(up[rounds:rounds + 1])])
+    if trace is not None:
+        _emit_soccer_records(trace, state, const, rounds, prev_n, up,
+                             wire_payload, wire_meta, round_walls,
+                             fin_wall, compile_round, compile_fin)
     return SoccerResult(
         centers=flatten_centers(state), rounds=rounds, const=const,
         n_hist=np.asarray(state.n_hist), v_hist=np.asarray(state.v_hist),
         uplink=up, state=state,
         wire_payload=wire_payload, wire_meta=wire_meta)
+
+
+def _emit_soccer_records(trace, state: SoccerState, const: SoccerConstants,
+                         rounds: int, prev_n: float, up: np.ndarray,
+                         wire_payload: np.ndarray, wire_meta: np.ndarray,
+                         round_walls, fin_wall, compile_round,
+                         compile_fin) -> None:
+    """Turn the state histories into the pinned per-round records.
+
+    ``n_hist[i]`` is N at the *start* of (0-indexed) round ``i``;
+    finalize writes ``n_hist[rounds]``, so the post-removal live count of
+    round ``r`` (1-based) is ``n_hist[r]`` for every r — that is the
+    number the stopping rule compared against eta.
+    """
+    n_hist = np.asarray(state.n_hist)
+    v_hist = np.asarray(state.v_hist)
+    a_hist = np.asarray(state.alpha_hist)
+    for r in range(1, rounds + 1):
+        n_after = int(n_hist[r])
+        trace.emit_round(
+            round=r, phase="round",
+            n_live=n_hist[r - 1], capacity=const.eta,
+            alpha=a_hist[r - 1], v=v_hist[r - 1],
+            removed=int(n_hist[r - 1]) - n_after,
+            stop_ratio=n_after / const.eta,
+            stop_margin=n_after - const.eta,
+            uplink_rows=up[r - 1],
+            wire_payload_bytes=wire_payload[r - 1],
+            wire_meta_bytes=wire_meta[r - 1],
+            wall_s=round_walls[r - 1] if r <= len(round_walls) else None,
+            compile_s=compile_round if r == 1 else None)
+    trace.emit_round(
+        round=rounds + 1, phase="finalize",
+        n_live=n_hist[rounds], capacity=const.eta,
+        uplink_rows=up[rounds],
+        wire_payload_bytes=wire_payload[rounds],
+        wire_meta_bytes=wire_meta[rounds],
+        wall_s=fin_wall, compile_s=compile_fin)
+    n_rem = int(state.n_remaining)
+    if n_rem <= const.eta:
+        trace.stop_reason = "capacity"
+    elif prev_n != math.inf and n_rem >= prev_n:
+        trace.stop_reason = "no_progress"
+    else:
+        trace.stop_reason = "max_rounds"

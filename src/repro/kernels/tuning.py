@@ -34,10 +34,17 @@ jit cache is dropped, so regenerate tables before the first kernel call.
 """
 from __future__ import annotations
 
+import collections
 import json
 import os
 import pathlib
 from typing import Dict, Optional, Tuple
+
+# Measured-table lookup outcomes ("measured_hit" / "measured_miss" /
+# "analytic_only"), surfaced through the metrics registry as
+# ``kernels.tuning.autotune`` (repro.obs.metrics). Counted at kernel
+# *trace* time — a warm jit cache adds nothing, which is itself signal.
+TUNE_COUNTS = collections.Counter()
 
 _D_BUCKETS = (128, 256, 512)
 _K_BUCKETS = (128, 256, 1024)
@@ -149,6 +156,7 @@ def _measured_sizes(kind: str, d: int, k: int,
         return None
     mode = autotune_mode()
     if mode == "off":
+        TUNE_COUNTS["analytic_only"] += 1
         return None
     import jax
     backend = jax.default_backend()
@@ -158,7 +166,9 @@ def _measured_sizes(kind: str, d: int, k: int,
         autotune.ensure_tuned(backend)
         entry = _load_measured(backend).get(measured_key(kind, d, k, dtype))
     if entry is None:
+        TUNE_COUNTS["measured_miss"] += 1
         return None
+    TUNE_COUNTS["measured_hit"] += 1
     # measured sizes round-trip through the same tile normalization that
     # clamp_bn applies, so a hand-edited or stale table can never hand a
     # kernel a non-tile panel

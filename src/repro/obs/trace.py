@@ -1,0 +1,322 @@
+"""Per-run structured tracing: spans, events, and per-round records.
+
+Design constraints (the tentpole contract):
+
+* **Off by default, provably near-zero-cost when off.** Every public
+  hook (``span``/``event``/``emit_round``/``current_trace``) is one
+  list-truthiness check when no trace is active — no allocation, no
+  clock read, no string formatting. The module stat counter ``_STATS``
+  lets tests assert that an untraced ``fit()`` allocated zero spans and
+  zero traces.
+* **Injectable clock.** All timestamps come from the module clock
+  (``clock()``, default ``time.perf_counter``); ``set_clock`` swaps it
+  for a fake in tests so span durations and round walls are
+  deterministic. Everything in the repo that times a fit (the facade,
+  the scenario sweep, the overhead gate) reads THIS clock, so bench
+  numbers and trace numbers can never come from two different timers.
+* **Optional ``jax.profiler.TraceAnnotation`` passthrough.** In
+  ``mode="full"`` with ``annotate=True``, each span also opens a
+  profiler annotation so the repo's spans line up with XLA's own
+  timeline in a captured profile. jax is imported lazily and failures
+  are swallowed — the tracer works in a jax-free interpreter.
+
+The per-round record schema is pinned (``ROUND_SCHEMA``): field names
+and value types are part of the exported JSONL contract and covered by a
+schema-stability test. Fields that do not apply to an algorithm (e.g.
+``v`` for k-means‖) are ``None``.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+# ------------------------------------------------------------------ clock
+
+_CLOCK: Callable[[], float] = time.perf_counter
+
+
+def clock() -> float:
+    """The one wall-clock every timed path in the repo reads."""
+    return _CLOCK()
+
+
+def set_clock(fn: Optional[Callable[[], float]]) -> Callable[[], float]:
+    """Swap the module clock (tests); returns the previous clock.
+    ``set_clock(None)`` restores the default ``time.perf_counter``."""
+    global _CLOCK
+    prev = _CLOCK
+    _CLOCK = time.perf_counter if fn is None else fn
+    return prev
+
+
+# ------------------------------------------------------------- the schema
+
+# The pinned per-round record: (field name, type of non-None values).
+# Appending a field is a schema EXTENSION (update the stability test and
+# the README glossary together); renaming or retyping one is a break.
+ROUND_SCHEMA = (
+    ("round", int),               # 1-based communication round index
+    ("phase", str),               # "round" | "finalize" | "upload"
+    ("n_live", int),              # live points at the round's start
+    ("capacity", int),            # stopping capacity (SOCCER eta, EIM11 s)
+    ("alpha", float),             # realized P2 sampling rate (SOCCER)
+    ("v", float),                 # removal threshold broadcast this round
+    ("removed", int),             # points removed by this round
+    ("stop_ratio", float),        # n_live_after / capacity
+    ("stop_margin", float),       # n_live_after - capacity (<= 0: stop)
+    ("uplink_rows", int),         # realized uploaded rows this round
+    ("wire_payload_bytes", int),  # achieved payload bytes (WireTally)
+    ("wire_meta_bytes", int),     # achieved metadata-sideband bytes
+    ("wall_s", float),            # host wall time of this round's step
+    ("compile_s", float),         # trace+compile time attributed here
+)
+ROUND_FIELDS = tuple(name for name, _ in ROUND_SCHEMA)
+_ROUND_TYPES = dict(ROUND_SCHEMA)
+
+PHASES = ("round", "finalize", "upload")
+
+TRACE_MODES = ("rounds", "full")
+
+# Allocation stats for the zero-overhead-when-off test: traces created,
+# spans entered, records emitted. Incremented only on the active paths.
+_STATS = collections.Counter()
+
+
+def round_record(**fields) -> Dict[str, Any]:
+    """Build one schema-conforming per-round record.
+
+    Unknown field names raise (the schema is pinned); missing fields are
+    ``None``; present values are coerced to the schema type so exported
+    records are JSON-stable regardless of the numpy scalars drivers pass.
+    """
+    unknown = sorted(set(fields) - set(ROUND_FIELDS))
+    if unknown:
+        raise ValueError(
+            f"unknown round-record field(s) {', '.join(unknown)}; the "
+            f"schema is pinned to {ROUND_FIELDS}")
+    phase = fields.get("phase")
+    if phase is not None and phase not in PHASES:
+        raise ValueError(f"unknown phase {phase!r}: expected one of {PHASES}")
+    out: Dict[str, Any] = {}
+    for name, typ in ROUND_SCHEMA:
+        v = fields.get(name)
+        out[name] = None if v is None else typ(v)
+    return out
+
+
+# ------------------------------------------------------------------- spans
+
+
+class Span:
+    """One named, timed interval inside a ``mode="full"`` trace.
+
+    Records ``(name, t0, t1, attrs)`` on exit; optionally mirrors itself
+    into ``jax.profiler.TraceAnnotation`` so repo spans land in captured
+    device profiles.
+    """
+
+    __slots__ = ("name", "attrs", "t0", "t1", "_trace", "_annotation")
+
+    def __init__(self, name: str, trace: "RunTrace", attrs: Dict[str, Any]):
+        self.name = name
+        self.attrs = attrs
+        self.t0 = self.t1 = 0.0
+        self._trace = trace
+        self._annotation = None
+
+    def __enter__(self) -> "Span":
+        _STATS["spans"] += 1
+        if self._trace.annotate:
+            try:  # pragma: no cover - depends on the jax build
+                from jax.profiler import TraceAnnotation
+                self._annotation = TraceAnnotation(self.name)
+                self._annotation.__enter__()
+            except Exception:
+                self._annotation = None
+        self.t0 = clock()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.t1 = clock()
+        if self._annotation is not None:
+            self._annotation.__exit__(*exc)
+        self._trace.spans.append(
+            {"name": self.name, "t0": self.t0, "t1": self.t1,
+             "attrs": self.attrs})
+
+    @property
+    def duration_s(self) -> float:
+        return self.t1 - self.t0
+
+
+class _NullSpan:
+    """The do-nothing span handed out whenever tracing is off."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return None
+
+
+_NULL_SPAN = _NullSpan()
+
+
+# --------------------------------------------------------------- RunTrace
+
+
+class RunTrace:
+    """The per-run trace container behind ``fit(trace=...)``.
+
+    ``mode="rounds"`` collects only per-round records plus the run-level
+    wall/compile split; ``mode="full"`` additionally records spans and
+    events (and, with ``annotate=True``, mirrors spans into
+    ``jax.profiler``). ``summary()`` is the exported, JSON-clean shape
+    that lands in ``ClusterResult.extra["trace"]`` and the JSONL/Chrome
+    exporters consume.
+    """
+
+    def __init__(self, mode: str = "rounds", *,
+                 meta: Optional[Dict[str, Any]] = None,
+                 annotate: bool = False):
+        if mode not in TRACE_MODES:
+            raise ValueError(
+                f"unknown trace mode {mode!r}: expected one of "
+                f"{TRACE_MODES} (or trace off)")
+        _STATS["traces"] += 1
+        self.mode = mode
+        self.annotate = annotate and mode == "full"
+        self.meta: Dict[str, Any] = dict(meta or {})
+        self.records: List[Dict[str, Any]] = []
+        self.spans: List[Dict[str, Any]] = []
+        self.events: List[Dict[str, Any]] = []
+        self.stop_reason: Optional[str] = None
+        self.wall_s: Optional[float] = None
+        self.t_start = clock()
+
+    # --- emission (drivers call these through the module helpers)
+    def emit_round(self, **fields) -> Dict[str, Any]:
+        _STATS["records"] += 1
+        rec = round_record(**fields)
+        self.records.append(rec)
+        return rec
+
+    def span(self, name: str, **attrs):
+        if self.mode != "full":
+            return _NULL_SPAN
+        return Span(name, self, attrs)
+
+    def event(self, name: str, **attrs) -> None:
+        if self.mode != "full":
+            return
+        self.events.append({"name": name, "t": clock(), "attrs": attrs})
+
+    # --- derived summaries
+    @property
+    def compile_s(self) -> float:
+        """Total trace+compile seconds attributed across the records."""
+        return float(sum(r["compile_s"] or 0.0 for r in self.records))
+
+    @property
+    def wire_payload_total(self) -> int:
+        return int(sum(r["wire_payload_bytes"] or 0 for r in self.records))
+
+    @property
+    def wire_meta_total(self) -> int:
+        return int(sum(r["wire_meta_bytes"] or 0 for r in self.records))
+
+    @property
+    def rounds_to_margin(self) -> Optional[int]:
+        """First round whose post-removal live set fit the coordinator
+        (``stop_margin <= 0``), or None if no round got there — the
+        "why did it stop at round r" number the reports surface."""
+        for rec in self.records:
+            if rec["stop_margin"] is not None and rec["stop_margin"] <= 0:
+                return rec["round"]
+        return None
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "mode": self.mode,
+            "meta": dict(self.meta),
+            "stop_reason": self.stop_reason,
+            "rounds_to_margin": self.rounds_to_margin,
+            "wall_s": self.wall_s,
+            "compile_s": self.compile_s,
+            "wire_payload_bytes": self.wire_payload_total,
+            "wire_meta_bytes": self.wire_meta_total,
+            "records": [dict(r) for r in self.records],
+            "spans": [dict(s) for s in self.spans],
+            "events": [dict(e) for e in self.events],
+        }
+
+
+# --------------------------------------------------- ambient trace context
+
+_STACK: List[RunTrace] = []
+
+
+def current_trace() -> Optional[RunTrace]:
+    """The innermost active RunTrace, or None (one truthiness check)."""
+    return _STACK[-1] if _STACK else None
+
+
+@contextlib.contextmanager
+def run_trace(trace: RunTrace):
+    """Activate ``trace`` for the block: drivers inside publish to it."""
+    _STACK.append(trace)
+    try:
+        yield trace
+    finally:
+        _STACK.pop()
+
+
+def span(name: str, **attrs):
+    """Ambient span: a real Span inside an active full trace, else a
+    shared no-op (no allocation when tracing is off)."""
+    if not _STACK:
+        return _NULL_SPAN
+    return _STACK[-1].span(name, **attrs)
+
+
+def event(name: str, **attrs) -> None:
+    """Ambient event (no-op unless a full trace is active)."""
+    if not _STACK:
+        return
+    _STACK[-1].event(name, **attrs)
+
+
+def emit_round(**fields) -> None:
+    """Ambient per-round record (no-op unless a trace is active)."""
+    if not _STACK:
+        return
+    _STACK[-1].emit_round(**fields)
+
+
+# ------------------------------------------------------- timing utilities
+
+
+def timed_compile(fn, *args):
+    """AOT-lower+compile a jitted callable for concrete ``args``, timed.
+
+    Returns ``(callable, compile_s)``. On success the callable is the
+    compiled executable — later calls pay zero trace/compile — and
+    ``compile_s`` is the measured trace+compile wall. Anything without a
+    working ``.lower`` (stubs, exotic backends) falls back to ``(fn,
+    None)``: the first call will compile inline and its round wall will
+    absorb the cost, exactly the untraced behavior.
+
+    NOTE for callers recording wire bytes: jax traces ``fn`` *here*, so
+    the call must happen inside the same ``wire_tally`` context the
+    first execution would have used.
+    """
+    t0 = clock()
+    try:
+        compiled = fn.lower(*args).compile()
+    except Exception:
+        return fn, None
+    return compiled, clock() - t0

@@ -202,12 +202,29 @@ def fit_kzmeans(x_parts, k: int, *, backend, key=None, w=None, alive=None,
         return centers, kept, tmass, tcost, v, realized
 
     from repro.core.comm import WireTally, wire_tally
+    from repro.obs.trace import clock, current_trace, timed_compile
     fn = backend.compile(one_round, ("rep", "machine", "machine"),
                          ("rep",) * 6)
     tally = WireTally()
-    with wire_tally(tally):
-        centers, kept, tmass, tcost, v, realized = fn(key, x, w_dev)
+    trace = current_trace()
+    wall_s = compile_s = None
+    if trace is None:
+        with wire_tally(tally):
+            centers, kept, tmass, tcost, v, realized = fn(key, x, w_dev)
+    else:
+        with wire_tally(tally):
+            fn, compile_s = timed_compile(fn, key, x, w_dev)
+            t0 = clock()
+            centers, kept, tmass, tcost, v, realized = fn(key, x, w_dev)
+            jax.block_until_ready(centers)
+            wall_s = clock() - t0
     up = np.asarray([int(realized)], np.int64)
+    if trace is not None:
+        trace.emit_round(
+            round=1, phase="upload", v=float(v), uplink_rows=up[0],
+            wire_payload_bytes=tally.payload, wire_meta_bytes=tally.meta,
+            wall_s=wall_s, compile_s=compile_s)
+        trace.stop_reason = "one_shot"
     return ClusterResult(
         centers=np.asarray(centers), k=k, algo="kzmeans",
         backend=backend.name, rounds=1, uplink_points=up,

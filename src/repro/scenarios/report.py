@@ -14,19 +14,24 @@ from typing import Optional, Sequence
 _COLUMNS = (
     ("scenario", 22), ("algo", 16), ("condition", 16), ("cost_ratio", 10),
     ("rounds", 6), ("uplink_pts", 10), ("uplink_MB", 9), ("wire_MB", 9),
-    ("x_omega", 9), ("time_s", 7), ("compile_s", 9),
+    ("x_omega", 9), ("time_s", 7), ("compile_s", 9), ("stop", 12),
+    ("rnd_margin", 10),
 )
 # uplink_MB is the MODELED volume (uplink-dtype accounting); wire_MB the
 # ACHIEVED volume measured at the collectives' itemsizes, and x_omega is
 # wire bytes over the Ω(m·k) frontier (Zhang et al., arXiv:1507.00026).
+# stop / rnd_margin come from the per-cell trace (repro.obs): why the
+# round loop ended, and the first round whose live set fit the
+# coordinator (the round count's explanation).
 
 
 def _fmt(row: dict) -> Sequence[str]:
     if row.get("skipped"):
         return (row["scenario"], row["algo"], row["condition"],
-                "—", "—", "—", "—", "—", "—", "—", "—")
+                "—", "—", "—", "—", "—", "—", "—", "—", "—", "—")
     wire = row.get("wire_bytes")
     omega = row.get("bytes_vs_omega_mk")
+    rtm = row.get("rounds_to_margin")
     return (
         row["scenario"], row["algo"], row["condition"],
         f"{row['cost_ratio']:.3f}",
@@ -37,6 +42,8 @@ def _fmt(row: dict) -> Sequence[str]:
         "—" if omega is None else f"{omega:.1f}",
         f"{row['wall_time_s']:.2f}",       # steady-state (compile excluded)
         f"{row.get('compile_s', 0.0):.2f}",
+        row.get("stop_reason") or "—",
+        "—" if rtm is None else str(rtm),
     )
 
 
@@ -79,7 +86,10 @@ def write_bench_json(rows: Sequence[dict], path, *, suite: str,
         "seed": seed,
         "unix_time": int(time.time()),
         "gap": summarize_gap(rows),
-        "rows": list(rows),
+        # full per-round traces ship separately (run.py --trace-out
+        # JSONL); the perf-trajectory artifact keeps only the row scalars
+        "rows": [{k: v for k, v in row.items() if k != "trace"}
+                 for row in rows],
     }
     path.write_text(json.dumps(payload, indent=1, default=str))
     return path

@@ -37,6 +37,10 @@ def main(argv=None) -> int:
                     help="virtual | mesh | auto")
     ap.add_argument("--out", default="BENCH_scenarios.json",
                     help="perf-trajectory JSON path ('' to skip)")
+    ap.add_argument("--trace-out", default="",
+                    help="per-cell round-trace JSONL path (repro.obs "
+                         "format; render with `python -m "
+                         "repro.obs.report <path>`; '' to skip)")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     args = ap.parse_args(argv)
@@ -70,6 +74,11 @@ def main(argv=None) -> int:
                                 quick=args.quick, algos=algos,
                                 seed=args.seed)
         print(f"# wrote {path}")
+    if args.trace_out:
+        from repro.obs.export import write_jsonl
+        traces = [r["trace"] for r in rows if r.get("trace")]
+        path = write_jsonl(traces, args.trace_out)
+        print(f"# wrote {path} ({len(traces)} cell trace(s))")
     return 0
 
 

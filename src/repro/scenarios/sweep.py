@@ -77,7 +77,7 @@ def _cell(scenario: Scenario, algo: str, condition: Condition,
 
     def run(extra=None) -> Tuple[object, float]:
         res = fit(data.x, k, algo=algo, backend=backend, m=scenario.m,
-                  w=data.w, seed=seed,
+                  w=data.w, seed=seed, trace="rounds",
                   shard_policy=scenario.shard_policy,
                   **{**params, **(extra or {})})
         return res, float(res.cost(eval_x, eval_w))
@@ -105,7 +105,9 @@ def _cell(scenario: Scenario, algo: str, condition: Condition,
     # Steady-state timing: re-run the winning configuration once — every
     # jit cache is now warm, so the second wall time is kernel + dispatch
     # only; the difference is the compile/trace overhead the old
-    # single-run column silently folded in.
+    # single-run column silently folded in. Both walls read the one
+    # shared clock (repro.obs.trace.clock, via fit's timing), so these
+    # numbers and the per-round trace walls come from the same timer.
     first_wall = float(res.wall_time_s)
     res2, _ = run(winning)
     steady_wall = float(res2.wall_time_s)
@@ -115,6 +117,12 @@ def _cell(scenario: Scenario, algo: str, condition: Condition,
     if wire_total is None:          # drivers without a WireTally fall
         wire_total = int(res.uplink_bytes_total)   # back to the model
     omega = omega_mk_bytes(scenario.m, k, int(np.asarray(data.x).shape[-1]))
+    trace = res.extra.get("trace")
+    if trace is not None:
+        # label the per-cell trace so the run-report CLI / Perfetto view
+        # can tell cells apart inside one sweep-wide JSONL
+        trace["meta"].update(scenario=scenario.name,
+                             condition=condition.name)
     row.update(
         cost=cost, cost_ratio=cost / max(base_cost, 1e-30),
         rounds=int(res.rounds),
@@ -124,7 +132,11 @@ def _cell(scenario: Scenario, algo: str, condition: Condition,
         wire_bytes=int(wire_total),
         bytes_vs_omega_mk=round(wire_total / max(omega, 1), 3),
         wall_time_s=steady_wall,
-        compile_s=max(first_wall - steady_wall, 0.0))
+        compile_s=max(first_wall - steady_wall, 0.0),
+        stop_reason=None if trace is None else trace["stop_reason"],
+        rounds_to_margin=(None if trace is None
+                          else trace["rounds_to_margin"]),
+        trace=trace)
     if res.n_hist is not None:
         row["n_hist"] = [int(v) for v in np.asarray(res.n_hist)]
     return row
@@ -156,9 +168,8 @@ def run_stream_scenario(scenario: Scenario, quick: bool = True,
     policy's final-centers cost over the whole stream vs the exact
     centralized baseline; ``rounds`` counts full re-clusters) plus the
     staleness/uplink comparison columns the acceptance criteria read."""
-    import time as _time
-
     from repro.api.result import omega_mk_bytes
+    from repro.obs.trace import clock
     from repro.scenarios.registry import ScenarioData
     from repro.streaming.protocol import run_stream_suite
 
@@ -166,10 +177,10 @@ def run_stream_scenario(scenario: Scenario, quick: bool = True,
     k = scenario.k_for(quick)
     data = ScenarioData(x=np.concatenate(batches))
     base_cost = exact_baseline(data, k, seed, scenario.baseline_iters)
-    t0 = _time.perf_counter()
+    t0 = clock()
     stream_rows = run_stream_suite(batches, k, scenario.stream_policies,
                                    m=scenario.m, seed=seed, backend=backend)
-    wall = _time.perf_counter() - t0
+    wall = clock() - t0
     rows = []
     for r in stream_rows:
         rows.append(dict(

@@ -32,12 +32,24 @@ import numpy as np
 
 from repro.api.result import ClusterResult
 from repro.kernels import ops
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import clock
 from repro.streaming.tree import stream_bucket
 
 #: Default serving batch width (rows per kernel dispatch). Big enough to
 #: keep the fused sweep bandwidth-bound, small enough that one straggler
 #: batch doesn't stall the queue.
 SERVE_BATCH = 4096
+
+# Per-dispatch serving latency, in milliseconds. Bounds chosen for the
+# jitted-assign path: sub-ms steady state, the tail buckets catch
+# first-call compiles and oversized chunks. This is the measurement hook
+# for latency-sensitive serving (IFCA-style per-cluster models /
+# embedding serving — see ROADMAP).
+SERVE_LATENCY = REGISTRY.histogram(
+    "streaming.serve.latency_ms",
+    buckets=(0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0,
+             250.0, 1000.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +112,7 @@ def serve_assign(snap: CenterSnapshot, x, *,
     out_a = np.empty((n,), np.int32)
     out_d = np.empty((n,), np.float32)
     for off in range(0, n, batch):
+        t0 = clock()
         chunk = x[off:off + batch]
         width = stream_bucket(min(batch, chunk.shape[0]))
         pad = np.zeros((width, x.shape[1]), np.float32)
@@ -107,4 +120,5 @@ def serve_assign(snap: CenterSnapshot, x, *,
         idx, d2 = _assign_batch(jnp.asarray(pad), centers)
         out_a[off:off + chunk.shape[0]] = np.asarray(idx)[: chunk.shape[0]]
         out_d[off:off + chunk.shape[0]] = np.asarray(d2)[: chunk.shape[0]]
+        SERVE_LATENCY.observe((clock() - t0) * 1e3)
     return out_a, out_d, snap.version

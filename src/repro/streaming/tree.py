@@ -44,7 +44,16 @@ from repro.coresets.sensitivity import build_coreset
 # Times each traced body below was traced (NOT called) — the regression
 # test asserts folding B batches of varying sizes traces a constant
 # number of bodies (shape bucketing holds; no per-batch retrace).
+# Adopted by the metrics registry as ``streaming.tree.trace_counts``
+# (repro.obs.metrics): prefer ``REGISTRY.reset(...)`` / ``scope()`` over
+# touching this counter directly.
 TRACE_COUNTS = collections.Counter()
+
+
+def reset_trace_counts() -> None:
+    """Zero the retrace counters (equivalent to
+    ``REGISTRY.reset("streaming.tree.trace_counts")``)."""
+    TRACE_COUNTS.clear()
 
 # One level's buckets across machines: ((m, t, d) points, (m, t) weights).
 Bucket = Tuple[jax.Array, jax.Array]

@@ -38,7 +38,6 @@ from __future__ import annotations
 
 import functools
 import math
-import time
 from typing import Optional
 
 import jax
@@ -53,8 +52,14 @@ from repro.core.metrics import assignment_counts, distributed_cost
 from repro.core.sharded_kmeans import distributed_lloyd
 from repro.core.soccer import stopping_rule
 from repro.coresets.sensitivity import default_coreset_size
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import REGISTRY
 from repro.streaming.state import StreamState
 from repro.streaming.tree import flatten_tree, fold_batch, stream_bucket
+
+# Every drift-trigger evaluation lands here (fired or not) with the cost
+# ratio it saw — the re-cluster decision history of a live stream.
+DRIFT_EVENTS = REGISTRY.event_log("streaming.drift.events")
 
 
 @functools.lru_cache(maxsize=None)
@@ -167,7 +172,7 @@ def fit_update(result: ClusterResult, x_new, *, backend=None,
         raise ValueError(
             f"unknown recluster mode {recluster!r}: expected 'auto', "
             f"'always' or 'never'")
-    t0 = time.perf_counter()
+    t0 = obs_trace.clock()
     state: Optional[StreamState] = result.extra.get("stream")
     if state is None:
         state = init_stream(result, m=m, coreset_rows=coreset_rows,
@@ -206,6 +211,15 @@ def fit_update(result: ClusterResult, x_new, *, backend=None,
                                   drift_tol * state.ref_cost, math.inf)
             if math.isfinite(state.ref_cost) else False,
             "always": True, "never": False}[recluster]
+    DRIFT_EVENTS.append(
+        update=int(state.n_updates), fired=bool(fire),
+        cost_per_weight=cost_per_w, ref_cost=state.ref_cost,
+        version=int(state.version))
+    if fire:
+        obs_trace.event("streaming.drift.recluster",
+                        update=int(state.n_updates),
+                        cost_per_weight=cost_per_w,
+                        ref_cost=state.ref_cost)
     reclustered = False
     if fire:
         state.key, k_rc = jax.random.split(state.key)
@@ -249,7 +263,7 @@ def fit_update(result: ClusterResult, x_new, *, backend=None,
         rounds=state.n_reclusters,
         uplink_points=np.asarray(state.uplink_points, np.int64),
         uplink_bytes=np.asarray(state.uplink_bytes, np.int64),
-        wall_time_s=time.perf_counter() - t0,
+        wall_time_s=obs_trace.clock() - t0,
         params=dict(k=state.k, m=state.m, t=state.t, kb=state.kb,
                     refine_iters=refine_iters, drift_tol=drift_tol,
                     recluster=recluster),

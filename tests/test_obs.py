@@ -1,0 +1,292 @@
+"""Telemetry contracts: schema stability, the trace-off zero-cost
+guarantee, the wire-sum identity, export round-trips, the report CLI,
+registry mechanics, and the sequential-fit reproducibility gate.
+
+The mesh legs run under ``make test-mesh``
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``) like the other
+``@pytest.mark.mesh`` suites.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import fit
+from repro.obs import REGISTRY, MetricsRegistry
+from repro.obs.export import (chrome_trace_events, load_jsonl, write_jsonl)
+from repro.obs.report import format_diff, format_summary, main as report_main
+from repro.obs.trace import (ROUND_FIELDS, ROUND_SCHEMA, RunTrace, _STATS,
+                             round_record, run_trace)
+
+M, K = 4, 4
+
+
+def _data(seed=0, p=256, d=8):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(M, p, d)).astype(np.float32)
+
+
+def _soccer(x, trace=None, seed=0):
+    return fit(x, K, algo="soccer", backend="virtual", epsilon=0.2,
+               seed=seed, trace=trace)
+
+
+# ------------------------------------------------------------ schema
+
+
+def test_round_schema_is_pinned():
+    """The exporter/report/diff contract: these exact fields, these exact
+    types. Extending the schema is fine; renaming or retyping a field
+    breaks every archived JSONL and must show up here first."""
+    assert dict(ROUND_SCHEMA) == {
+        "round": int, "phase": str, "n_live": int, "capacity": int,
+        "alpha": float, "v": float, "removed": int, "stop_ratio": float,
+        "stop_margin": float, "uplink_rows": int,
+        "wire_payload_bytes": int, "wire_meta_bytes": int,
+        "wall_s": float, "compile_s": float,
+    }
+    assert ROUND_FIELDS == tuple(name for name, _ in ROUND_SCHEMA)
+
+
+def test_round_record_coerces_and_rejects():
+    rec = round_record(round=np.int64(2), phase="round",
+                       n_live=np.int32(10), alpha=np.float32(0.5))
+    assert rec["round"] == 2 and type(rec["round"]) is int
+    assert type(rec["alpha"]) is float
+    assert rec["v"] is None                    # missing -> None, key present
+    assert set(rec) == set(ROUND_FIELDS)
+    with pytest.raises(ValueError):
+        round_record(round=1, phase="round", bogus_field=3)
+    with pytest.raises(ValueError):
+        round_record(round=1, phase="warmup")  # phases are pinned too
+
+
+# ------------------------------------------------------------ off = free
+
+
+def test_trace_off_allocates_nothing():
+    """The zero-cost contract: an untraced fit touches none of the trace
+    machinery — no RunTrace, no spans, no records, no 'trace' key."""
+    x = _data()
+    _soccer(x)                                # warm (compile may span)
+    before = dict(_STATS)
+    res = _soccer(x)
+    assert dict(_STATS) == before
+    assert "trace" not in res.extra
+
+
+# ------------------------------------------------------------ rounds mode
+
+
+def test_soccer_trace_wire_sum_and_stop_margin():
+    """Acceptance: the per-round records sum to the result's measured
+    wire bytes, and the stopping-rule margin explains the round count —
+    the first round whose post-removal live set fit the coordinator is
+    the last round the loop ran (plus the finalize record)."""
+    x = _data(p=2048)                         # big enough to need rounds
+    res = _soccer(x, trace="rounds")
+    assert res.rounds >= 1
+    t = res.extra["trace"]
+    recs = t["records"]
+    assert len(recs) == res.rounds + 1        # rounds + finalize
+    assert [r["phase"] for r in recs[:-1]] == ["round"] * res.rounds
+    assert recs[-1]["phase"] == "finalize"
+    wire = sum(r["wire_payload_bytes"] + r["wire_meta_bytes"] for r in recs)
+    assert wire == res.wire_bytes_total
+    assert t["wire_payload_bytes"] + t["wire_meta_bytes"] == wire
+    # stopping-rule margin: capacity stops exactly when margin <= 0
+    if t["stop_reason"] == "capacity":
+        assert t["rounds_to_margin"] == res.rounds
+        assert recs[res.rounds - 1]["stop_margin"] <= 0
+    for r in recs[:-1]:
+        assert r["n_live"] > 0 and r["uplink_rows"] >= 0
+        assert r["wall_s"] is not None and r["wall_s"] >= 0
+    assert t["compile_s"] is not None and t["compile_s"] > 0
+    assert t["meta"]["algo"] == "soccer" and t["meta"]["eta"] > 0
+
+
+def test_one_shot_drivers_trace_wire_sum():
+    x = _data()
+    for algo, params in (("lloyd", dict(iters=3)),
+                         ("coreset_kmeans", dict(coreset_size=64,
+                                                 lloyd_iters=3))):
+        res = fit(x, K, algo=algo, backend="virtual", seed=0,
+                  trace="rounds", **params)
+        t = res.extra["trace"]
+        assert t["stop_reason"] == "one_shot"
+        assert len(t["records"]) == 1 and t["records"][0]["phase"] == "upload"
+        wire = sum(r["wire_payload_bytes"] + r["wire_meta_bytes"]
+                   for r in t["records"])
+        assert wire == res.wire_bytes_total
+
+
+def test_full_mode_records_spans_and_events():
+    rt = RunTrace(mode="full")
+    with run_trace(rt):
+        from repro.obs.trace import event, span
+        with span("outer", layer="test"):
+            event("ping", n=1)
+    assert [s["name"] for s in rt.spans] == ["outer"]
+    assert rt.spans[0]["attrs"] == {"layer": "test"}
+    assert rt.events[0]["name"] == "ping"
+    summary = rt.summary()
+    assert summary["mode"] == "full"
+    assert len(summary["spans"]) == 1 and len(summary["events"]) == 1
+
+
+# ------------------------------------------------------------ export
+
+
+def test_jsonl_round_trip(tmp_path):
+    x = _data()
+    a = _soccer(x, trace="rounds").extra["trace"]
+    b = _soccer(x, trace="rounds", seed=1).extra["trace"]
+    path = write_jsonl([a, b], tmp_path / "t.jsonl")
+    runs = load_jsonl(path)
+    assert len(runs) == 2
+    assert runs[0]["records"] == a["records"]
+    assert runs[1]["stop_reason"] == b["stop_reason"]
+    assert runs[0]["wire_payload_bytes"] == a["wire_payload_bytes"]
+
+
+def test_jsonl_orphan_line_raises(tmp_path):
+    path = tmp_path / "bad.jsonl"
+    path.write_text(json.dumps({"kind": "round", "round": 1}) + "\n")
+    with pytest.raises(ValueError):
+        load_jsonl(path)
+
+
+def test_chrome_trace_export(tmp_path):
+    x = _data()
+    t = _soccer(x, trace="rounds").extra["trace"]
+    events = chrome_trace_events(t)
+    complete = [e for e in events if e["ph"] == "X"]
+    assert len(complete) == len(t["records"])
+    assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in complete)
+    # rounds lie back to back on one timeline row
+    rounds = sorted((e["ts"], e["dur"]) for e in complete
+                    if e["tid"] == 1)
+    for (ts0, d0), (ts1, _) in zip(rounds, rounds[1:]):
+        assert abs((ts0 + d0) - ts1) < 1.0    # contiguous (us resolution)
+
+
+# ------------------------------------------------------------ report CLI
+
+
+def test_report_cli_single_and_diff(tmp_path, capsys):
+    x = _data()
+    a = _soccer(x, trace="rounds").extra["trace"]
+    b = _soccer(x, trace="rounds", seed=1).extra["trace"]
+    pa = write_jsonl([a], tmp_path / "a.jsonl")
+    pb = write_jsonl([b], tmp_path / "b.jsonl")
+    assert report_main([str(pa)]) == 0
+    out = capsys.readouterr().out
+    assert "stop_reason" in out and "round" in out and "finalize" in out
+    assert report_main([str(pa), str(pb)]) == 0
+    out = capsys.readouterr().out
+    assert "wall_s" in out                    # diff table rendered
+    # formatter directly (what selfcheck prints)
+    assert "wire_bytes" in format_summary(a)
+    assert format_diff(a, b)
+
+
+# ------------------------------------------------------------ registry
+
+
+def test_registry_mechanics():
+    reg = MetricsRegistry()
+    c = reg.counter("t.hits")
+    reg.gauge("t.depth", lambda: 7)
+    h = reg.histogram("t.lat", buckets=(1.0, 10.0))
+    c.inc()
+    c.inc("", 2)
+    c.inc("miss")
+    h.observe(0.5)
+    h.observe(5.0)
+    h.observe(50.0)
+    snap = reg.read()
+    assert snap["t.hits"] == {"": 3, "miss": 1}
+    assert snap["t.depth"] == {"value": 7}
+    assert snap["t.lat"]["count"] == 3 and snap["t.lat"]["sum"] == 55.5
+    assert snap["t.lat"]["buckets"]["le=+inf"] == 1
+    assert reg.counter("t.hits") is c         # idempotent re-registration
+    with reg.scope() as sc:
+        c.inc("", 5)
+        h.observe(2.0)
+    delta = sc.delta()
+    assert delta["t.hits"][""] == 5 and delta["t.hits"]["miss"] == 0
+    assert delta["t.lat"]["count"] == 1
+    reg.reset()
+    assert reg.read()["t.hits"] == {}
+    assert reg.read()["t.lat"]["count"] == 0
+    assert reg.read()["t.depth"] == {"value": 7}  # callback gauge re-samples
+    assert reg.summary_lines("t.hits", "t.lat")
+    with pytest.raises(KeyError):
+        reg.read("t.nonexistent")
+
+
+def test_default_registry_adoptions_readable():
+    """The global registry resolves every adopted legacy counter without
+    import errors, and reset() leaves them usable."""
+    snap = REGISTRY.read()
+    for name in ("streaming.tree.trace_counts", "core.kmeans.trace_counts",
+                 "core.sharded_kmeans.trace_counts",
+                 "kernels.tuning.autotune", "core.comm.active_tallies"):
+        assert name in snap, name
+    x = _data()
+    with REGISTRY.scope() as sc:
+        _soccer(x)
+    delta = sc.delta()                        # delta over a fit never errors
+    assert "error" not in str(delta)
+    REGISTRY.reset()
+    assert REGISTRY.read()["core.comm.active_tallies"] == {"value": 0}
+
+
+# ------------------------------------------------------------ hygiene
+
+
+def test_sequential_fits_report_identical_metrics():
+    """Global-mutable hygiene: the SAME fit twice in one process yields
+    identical per-run telemetry — no counter bleed, no stale tally, no
+    order dependence (walls excluded: time is not deterministic)."""
+    x = _data()
+
+    def run():
+        t = _soccer(x, trace="rounds").extra["trace"]
+        recs = [{k: v for k, v in r.items()
+                 if k not in ("wall_s", "compile_s")} for r in t["records"]]
+        return (recs, t["stop_reason"], t["rounds_to_margin"],
+                t["wire_payload_bytes"], t["wire_meta_bytes"])
+
+    assert run() == run()
+
+
+# ------------------------------------------------------------ mesh leg
+
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="mesh trace tests need >= 2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+
+
+@pytest.mark.mesh
+@needs_mesh
+def test_trace_wire_sum_both_backends():
+    """The wire-sum identity holds on the REAL collectives too, and the
+    mesh/virtual traces agree on everything but time."""
+    m = jax.device_count()
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(m, 256, 8)).astype(np.float32)
+    per = {}
+    for backend in ("virtual", "mesh"):
+        res = fit(x, K, algo="soccer", backend=backend, epsilon=0.2,
+                  seed=0, trace="rounds")
+        t = res.extra["trace"]
+        wire = sum(r["wire_payload_bytes"] + r["wire_meta_bytes"]
+                   for r in t["records"])
+        assert wire == res.wire_bytes_total, backend
+        per[backend] = [(r["round"], r["phase"], r["uplink_rows"])
+                        for r in t["records"]]
+    assert per["virtual"] == per["mesh"]
